@@ -1,0 +1,87 @@
+"""Shared setup for the paper-table benchmarks.
+
+CPU-scale stand-ins for the paper's setting: a 4-layer decoder LM fine-tuned
+with LoRA on the keyword-classification task (prompt-style labels, App. E),
+100→N devices Dirichlet non-IID (§G.1). Absolute numbers differ from the
+paper's GPU wall-clocks; every benchmark reports the paper's *comparisons*
+(method A vs B on the same budget), which is what the claims are about.
+
+Env: REPRO_BENCH_ROUNDS (default 16), REPRO_BENCH_DEVICES (default 8).
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import Any, Dict
+
+import numpy as np
+
+from repro.config import FibecFedConfig, ModelConfig
+from repro.data import dirichlet_partition, make_keyword_task
+from repro.federated import make_runner, run_experiment
+from repro.models import build_model
+from repro.train import make_loss_fn
+
+ROUNDS = int(os.environ.get("REPRO_BENCH_ROUNDS", "16"))
+DEVICES = int(os.environ.get("REPRO_BENCH_DEVICES", "8"))
+
+TINY_LM = ModelConfig(
+    name="bench-lm", family="dense", num_layers=4, d_model=64, num_heads=4,
+    num_kv_heads=2, d_ff=128, vocab_size=512, head_dim=16, rope="full",
+    norm="rmsnorm", mlp="swiglu", dtype="float32", lora_rank=4, max_seq_len=64,
+)
+
+
+def fl_config(**overrides) -> FibecFedConfig:
+    base = dict(
+        num_devices=DEVICES, devices_per_round=max(2, DEVICES // 2), rounds=ROUNDS,
+        batch_size=8, learning_rate=3e-3, fim_warmup_epochs=1,
+        gal_fraction=0.75, sparse_ratio=0.5,
+    )
+    base.update(overrides)
+    return FibecFedConfig(**base)
+
+
+_CACHE: Dict[str, Any] = {}
+
+
+def world(seed: int = 0, n_samples: int = 320, seq_len: int = 24):
+    key = f"{seed}_{n_samples}_{seq_len}"
+    if key not in _CACHE:
+        model = build_model(TINY_LM)
+        task = make_keyword_task(
+            n_samples=n_samples, seq_len=seq_len, vocab_size=TINY_LM.vocab_size, seed=seed
+        )
+        test = make_keyword_task(
+            n_samples=128, seq_len=seq_len, vocab_size=TINY_LM.vocab_size, seed=seed + 1000
+        )
+        parts = dirichlet_partition(task.data["label"], DEVICES, alpha=1.0, seed=seed)
+        client_data = [
+            {k: v[idx] for k, v in task.data.items() if k != "label"} for idx in parts
+        ]
+        test_data = {k: v for k, v in test.data.items() if k != "label"}
+        _CACHE[key] = (model, task, client_data, test_data)
+    return _CACHE[key]
+
+
+def run_method(
+    name: str, *, seed: int = 0, fl: FibecFedConfig = None, **runner_kw
+) -> Dict[str, Any]:
+    model, task, client_data, test_data = world(seed)
+    fl = fl or fl_config()
+    t0 = time.perf_counter()
+    runner = make_runner(
+        name, model, make_loss_fn(model), fl, client_data,
+        seed=seed, optimizer="adamw", **runner_kw
+    )
+    res = run_experiment(runner, test_data, rounds=fl.rounds, eval_every=4,
+                         target_accuracy=0.45)
+    res["setup_plus_run_s"] = time.perf_counter() - t0
+    res["comm_bytes_round0"] = (
+        runner.comm_bytes_per_round[0] if runner.comm_bytes_per_round else 0
+    )
+    return res
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

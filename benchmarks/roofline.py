@@ -1,0 +1,52 @@
+"""§Roofline — emit the per-(arch × shape × mesh) roofline table from the
+dry-run artifacts in experiments/dryrun/ (deliverable g).
+
+Each row: the three terms in seconds, the dominant bottleneck, MODEL_FLOPS /
+HLO_FLOPs (useful-compute fraction), and one-line guidance. Run the dry-run
+sweep first (scripts/run_dryrun_all.sh).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import csv_row
+
+HINTS = {
+    "memory": "increase arithmetic intensity: fuse/bf16 activations, bigger per-chip tiles",
+    "compute": "already MXU-bound: only algorithmic wins (sparsity, fewer layers) move it",
+    "collective": "reshard to cut all-gathers; overlap collectives with compute",
+}
+
+
+def run(dryrun_dir: str = "experiments/dryrun") -> list:
+    rows = []
+    files = sorted(glob.glob(os.path.join(dryrun_dir, "*.json")))
+    if not files:
+        return [csv_row("roofline/missing", 0.0, "run scripts/run_dryrun_all.sh first")]
+    for path in files:
+        with open(path) as f:
+            rec = json.load(f)
+        tag = os.path.basename(path)[: -len(".json")]
+        if rec.get("status") == "skipped":
+            rows.append(csv_row(f"roofline/{tag}", 0.0, f"skipped:{rec['reason'][:40]}"))
+            continue
+        if rec.get("status") != "ok":
+            rows.append(csv_row(f"roofline/{tag}", 0.0, "FAILED"))
+            continue
+        r = rec["roofline"]
+        uf = rec.get("useful_fraction")
+        rows.append(csv_row(
+            f"roofline/{tag}",
+            max(r["compute_s"], r["memory_s"], r["collective_s"]) * 1e6,
+            f"compute_s={r['compute_s']:.2e};memory_s={r['memory_s']:.2e};"
+            f"collective_s={r['collective_s']:.2e};dominant={r['dominant']};"
+            f"useful_frac={uf:.3f}" if uf is not None else "useful_frac=na",
+        ))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

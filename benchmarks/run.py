@@ -1,0 +1,57 @@
+"""Benchmark harness — one module per paper table (deliverable d).
+
+Prints ``name,us_per_call,derived`` CSV. Modules:
+  table1_accuracy  — Table 1 (convergence accuracy vs baselines)
+  table2_time      — Table 2/7 (time-to-target-accuracy)
+  table13_comm     — Table 13 (communication overhead)
+  table5_selection — Table 5/6, App. G.2 (data-selection strategies)
+  fig7_ablations   — §5.7, Fig. 7, Table 12 (curriculum/GAL/sparse/β)
+  kernels_bench    — kernel reference-path micro-benchmarks
+  roofline         — §Roofline table from the dry-run artifacts
+
+Env: REPRO_BENCH_ROUNDS / REPRO_BENCH_DEVICES scale the FL runs;
+``--only <module>`` runs a single table.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+MODULES = [
+    "kernels_bench",
+    "table1_accuracy",
+    "table2_time",
+    "table13_comm",
+    "table5_selection",
+    "fig7_ablations",
+    "roofline",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    mods = [args.only] if args.only else MODULES
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in mods:
+        t0 = time.perf_counter()
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+            for row in mod.run():
+                print(row)
+                sys.stdout.flush()
+        except Exception:
+            traceback.print_exc()
+            print(f"{name},0.0,ERROR")
+            failures += 1
+        print(f"# {name} took {time.perf_counter() - t0:.1f}s", file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

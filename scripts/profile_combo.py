@@ -1,0 +1,39 @@
+"""Static profile of one (arch, shape): top HBM-traffic op_names."""
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("REPRO_DRYRUN_XLA_FLAGS") or "--xla_force_host_platform_device_count=512"
+import sys
+sys.path.insert(0, "src")
+import json
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("arch"); ap.add_argument("shape")
+    ap.add_argument("--set", action="append", default=[])
+    ap.add_argument("--layout", default="tp")
+    ap.add_argument("-k", type=int, default=25)
+    args = ap.parse_args()
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        overrides[k] = v.lower() == "true" if v.lower() in ("true","false") else v
+    # reuse dryrun_one but capture the compiled text
+    import repro.launch.dryrun as dr
+    from repro.launch import hlo_stats
+    # monkeypatch summarize to also dump top ops
+    from repro.launch import analysis as ana
+    orig = ana.summarize_compiled
+    def wrapped(compiled, *, chips):
+        out = orig(compiled, chips=chips)
+        print("\n=== top HBM traffic contributors (per-device bytes) ===")
+        for name, b in hlo_stats.top_traffic_ops(compiled.as_text(), args.k):
+            print(f"{b/1e9:10.2f} GB  {name[:140]}")
+        return out
+    ana.summarize_compiled = wrapped
+    rec = dr.dryrun_one(args.arch, args.shape, overrides=overrides or None, layout=args.layout)
+    r = rec["roofline"]
+    print(f"\nterms: compute={r['compute_s']:.3f}s memory={r['memory_s']:.3f}s collective={r['collective_s']:.3f}s")
+    print("collectives:", {k: f"{v/1e9:.2f}GB" for k, v in rec["collectives"].items() if v})
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Flat-npz pytree checkpointing (no orbax dependency).
+
+Pytrees are flattened to ``path/to/leaf`` keys; dtypes/shapes round-trip
+exactly. Writes are atomic (tmp + rename) so a crashed run never leaves a
+half-written checkpoint behind.
+"""
+from __future__ import annotations
+
+import os
+import re
+import tempfile
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.utils import flatten_dict, unflatten_dict
+
+_STEP_RE = re.compile(r"ckpt_(\d+)\.npz$")
+
+
+def save_checkpoint(directory: str, step: int, tree: Any, *, keep: int = 3) -> str:
+    """Save `tree` (nested dict of arrays) as ckpt_<step>.npz. Returns path."""
+    os.makedirs(directory, exist_ok=True)
+    flat = flatten_dict(tree)
+    arrays = {k: np.asarray(v) for k, v in flat.items()}
+    path = os.path.join(directory, f"ckpt_{step}.npz")
+    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            np.savez(f, **arrays)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+    _gc(directory, keep)
+    return path
+
+
+def load_checkpoint(path: str) -> Dict[str, Any]:
+    with np.load(path) as data:
+        flat = {k: data[k] for k in data.files}
+    return unflatten_dict(flat)
+
+
+def latest_checkpoint(directory: str) -> Optional[str]:
+    if not os.path.isdir(directory):
+        return None
+    best, best_step = None, -1
+    for name in os.listdir(directory):
+        m = _STEP_RE.match(name)
+        if m and int(m.group(1)) > best_step:
+            best, best_step = os.path.join(directory, name), int(m.group(1))
+    return best
+
+
+def _gc(directory: str, keep: int) -> None:
+    ckpts = []
+    for name in os.listdir(directory):
+        m = _STEP_RE.match(name)
+        if m:
+            ckpts.append((int(m.group(1)), name))
+    for _, name in sorted(ckpts)[:-keep]:
+        os.unlink(os.path.join(directory, name))

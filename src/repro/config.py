@@ -1,0 +1,237 @@
+"""Configuration system.
+
+Every architecture is described by a single :class:`ModelConfig`. Configs are
+registered by id (``--arch <id>``) in :mod:`repro.configs`. Input shapes are
+described by :class:`InputShape` (the four assigned shapes live in
+``repro.configs.shapes``). FL / FibecFed hyper-parameters live in
+:class:`FibecFedConfig`, mirroring Table 8 of the paper.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Model configuration
+# ---------------------------------------------------------------------------
+
+FAMILIES = ("dense", "moe", "ssm", "hybrid", "encdec", "vlm", "audio", "encoder")
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int = 0
+    top_k: int = 1
+    d_ff_expert: int = 0
+    # Shared (always-on) expert, as in Llama-4.
+    shared_expert: bool = False
+    d_ff_shared: int = 0
+    capacity_factor: float = 1.25
+    # Tokens are routed within groups of this size (keeps the dispatch one-hot
+    # tensor small; see DESIGN.md §3 MoE).
+    router_group_size: int = 512
+    aux_loss_weight: float = 0.01
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128
+    head_dim: int = 64
+    expand: int = 2
+    chunk_size: int = 128
+    conv_width: int = 4
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def num_heads(self, d_model: int) -> int:
+        return self.d_inner(d_model) // self.head_dim
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # one of FAMILIES
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None  # default d_model // num_heads
+
+    # attention details
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope: str = "full"  # "full" | "2d" (chatglm: rope on half the head dim) | "none"
+    rope_theta: float = 10000.0
+    attention_window: Optional[int] = None  # sliding-window size (None = full)
+    parallel_residual: bool = False
+    norm: str = "rmsnorm"  # "rmsnorm" | "layernorm"
+    mlp: str = "swiglu"  # "swiglu" | "gelu"
+    logit_soft_cap: Optional[float] = None
+    tie_embeddings: bool = False
+
+    # family-specific
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    # hybrid (zamba2): one shared attention+mlp block applied every
+    # `hybrid_period` SSM layers.
+    hybrid_period: int = 6
+    # enc-dec (whisper)
+    encoder_layers: int = 0
+    encoder_seq_len: int = 1500  # stubbed conv/mel frame count
+    # vlm / audio stub frontend
+    num_prefix_embeddings: int = 0  # patch/frame embeddings prepended to text
+
+    # encoder-only classification (RoBERTa, the paper's own model)
+    num_classes: Optional[int] = None
+
+    max_seq_len: int = 8192
+    dtype: str = "bfloat16"
+
+    # ---- performance-iteration knobs (§Perf; default = paper-faithful) ----
+    remat: bool = False  # activation-checkpoint each layer (recompute in bwd)
+    seq_parallel: bool = False  # sequence-parallel activation constraints
+    attn_score_dtype: str = "float32"  # bf16 halves attention score traffic
+    # uneven-E MoE (granite): replicate experts + shard token groups over the
+    # model axis instead of within-expert tensor parallelism (§Perf B)
+    moe_token_parallel: bool = False
+
+    # LoRA
+    lora_rank: int = 8
+    lora_alpha: float = 16.0
+
+    citation: str = ""
+
+    def __post_init__(self):
+        assert self.family in FAMILIES, self.family
+        if self.family in ("moe",):
+            assert self.moe is not None and self.moe.num_experts > 0
+        if self.family in ("ssm", "hybrid"):
+            assert self.ssm is not None
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def supports_long_context(self) -> bool:
+        """long_500k decodes need sub-quadratic attention (SSM/hybrid or SWA)."""
+        return self.family in ("ssm", "hybrid") or self.attention_window is not None
+
+    def reduced(self, **overrides) -> "ModelConfig":
+        """A tiny same-family variant for CPU smoke tests."""
+        small: Dict = dict(
+            num_layers=2,
+            d_model=min(self.d_model, 128),
+            num_heads=min(self.num_heads, 4),
+            num_kv_heads=min(self.num_kv_heads, min(self.num_heads, 4)),
+            d_ff=min(self.d_ff, 256) if self.d_ff else 0,
+            vocab_size=min(self.vocab_size, 512),
+            head_dim=32,
+            max_seq_len=256,
+            encoder_layers=2 if self.encoder_layers else 0,
+            encoder_seq_len=min(self.encoder_seq_len, 16),
+            num_prefix_embeddings=min(self.num_prefix_embeddings, 8),
+            hybrid_period=2,
+            lora_rank=4,
+            dtype="float32",
+        )
+        if self.moe is not None:
+            small["moe"] = dataclasses.replace(
+                self.moe,
+                num_experts=min(self.moe.num_experts, 4),
+                top_k=min(self.moe.top_k, 2),
+                d_ff_expert=min(self.moe.d_ff_expert, 128),
+                d_ff_shared=min(self.moe.d_ff_shared, 128) if self.moe.shared_expert else 0,
+                router_group_size=64,
+            )
+        if self.ssm is not None:
+            small["ssm"] = dataclasses.replace(
+                self.ssm, d_state=min(self.ssm.d_state, 16), head_dim=32, chunk_size=32
+            )
+        if self.attention_window is not None:
+            small["attention_window"] = 64
+        small.update(overrides)
+        # ensure kv divides heads
+        nh, nkv = small["num_heads"], small["num_kv_heads"]
+        if nkv and nh % nkv:
+            small["num_kv_heads"] = 1
+        return dataclasses.replace(self, **small)
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (the four assigned global shapes)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+# ---------------------------------------------------------------------------
+# FibecFed / FL configuration (paper Table 8 defaults)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class FibecFedConfig:
+    num_devices: int = 100  # K in the paper
+    devices_per_round: int = 10
+    rounds: int = 100  # T
+    local_epochs: int = 1
+    batch_size: int = 8
+    learning_rate: float = 4e-4
+
+    # curriculum (Formula 18): B_k^t = (beta + (1-beta) * t/(alpha*T)) * n_k/B
+    curriculum: str = "linear"  # "linear" | "sqrt" | "exp" | "none"
+    beta_initial_ratio: float = 0.6  # beta (Table 12 best ~0.6)
+    alpha_full_data: float = 0.8  # alpha
+
+    # GAL selection
+    noise_budget: float = 0.05  # gamma in Eq. 6/8
+    norm_p: float = 2.0  # l_p of the perturbation
+    gal_fraction: Optional[float] = 0.75  # override; None -> lossless criterion
+    mu_global_local: float = 1.0  # mu in N* = mu/N * sum n_k N_k*
+
+    # local sparse update
+    fim_momentum: float = 0.9  # gamma (momentum) in F_k^t
+    fim_warmup_epochs: int = 2  # T'
+    sparse_ratio: Optional[float] = 0.5  # rho override; None -> lossless
+    lanczos_iters: int = 16  # Hessian spectrum estimation
+
+    # non-IID partition
+    dirichlet_alpha: float = 1.0
+    seed: int = 0
+
+
+@dataclass(frozen=True)
+class MeshConfig:
+    data: int = 16
+    model: int = 16
+    pods: int = 1
+
+    @property
+    def num_chips(self) -> int:
+        return self.data * self.model * self.pods
+
+
+# TPU v5e roofline constants (per chip).
+@dataclass(frozen=True)
+class HardwareSpec:
+    peak_flops: float = 197e12  # bf16 FLOP/s
+    hbm_bandwidth: float = 819e9  # bytes/s
+    ici_bandwidth: float = 50e9  # bytes/s per link
+
+
+TPU_V5E = HardwareSpec()

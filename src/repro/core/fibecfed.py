@@ -1,0 +1,353 @@
+"""FibecFed — Algorithm 1, end to end, on real (host-simulated) FL clients.
+
+Initialization phase (Lines 1-10):
+  * per-device Fisher difficulty score per batch (Formulas 16-17), ascending
+    sort (curriculum order);
+  * per-device layer sensitivity scores (Eq. 9-10) → server aggregation
+    (Eq. 11) → GAL selection with the lossless count (or configured fraction);
+  * per-device momentum-FIM warmup → neuron masks for local update (§4.3.2).
+
+Tuning phase (Lines 11-19): sample K devices, merge global GAL params into
+each client's LoRA, curriculum-select batches, run masked local SGD/AdamW,
+FedAvg the GAL part on the server.
+
+Baseline/ablation switches (used by benchmarks, mirroring the paper's
+comparisons): ``difficulty_metric`` (fisher | loss | length | random),
+``curriculum`` strategies, ``gal_mode`` (importance | full | random |
+ascending | descending), ``sparse_update`` on/off.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import FibecFedConfig, ModelConfig
+from repro.core import curriculum as curr
+from repro.core import fisher as fish
+from repro.core import gal as galmod
+from repro.core import sparse as sparsemod
+from repro.core.curriculum import CurriculumSchedule
+from repro.data.pipeline import gather_batch, make_batches
+from repro.lora import gal_mask_tree, neuron_mask_tree, zeros_like_lora
+from repro.models.model_api import ModelFns
+from repro.optim import make_optimizer
+from repro.train.losses import make_logits_loss
+
+
+@dataclasses.dataclass
+class ClientState:
+    data: Dict[str, np.ndarray]
+    n: int
+    batches: List[np.ndarray]
+    order: np.ndarray  # curriculum order over batches
+    lora: Any  # full local LoRA tree
+    opt_state: Any
+    fim: Any = None  # momentum diag-FIM
+    neuron_mask: Any = None  # update-mask tree (or None = dense)
+    difficulty: Optional[np.ndarray] = None
+    layer_scores: Optional[np.ndarray] = None
+    lossless_fraction: float = 1.0
+
+
+class FibecFed:
+    def __init__(
+        self,
+        model: ModelFns,
+        loss_fn: Callable,
+        fl: FibecFedConfig,
+        client_data: Sequence[Dict[str, np.ndarray]],
+        *,
+        optimizer: str = "sgd",
+        difficulty_metric: str = "fisher",
+        gal_mode: str = "importance",
+        sparse_update: bool = True,
+        seed: int = 0,
+    ):
+        self.model = model
+        self.cfg = model.cfg
+        self.loss_fn = loss_fn
+        self.fl = fl
+        self.difficulty_metric = difficulty_metric
+        self.gal_mode = gal_mode
+        self.sparse_update = sparse_update
+        self.rng = np.random.default_rng(seed)
+        self.key = jax.random.PRNGKey(seed)
+
+        self.params = model.init_params(jax.random.fold_in(self.key, 0))
+        init_lora = model.init_lora(jax.random.fold_in(self.key, 1))
+        self.global_lora = init_lora  # server copy (GAL part authoritative)
+
+        self.opt_init, self.opt_update = make_optimizer(optimizer)
+
+        self.schedule = CurriculumSchedule(
+            strategy=fl.curriculum,
+            beta=fl.beta_initial_ratio,
+            alpha=fl.alpha_full_data,
+            total_rounds=fl.rounds,
+        )
+
+        self.clients: List[ClientState] = []
+        for cd in client_data:
+            n = len(next(iter(cd.values())))
+            self.clients.append(
+                ClientState(
+                    data=cd,
+                    n=n,
+                    batches=make_batches(n, fl.batch_size),
+                    order=np.arange(max(1, (n + fl.batch_size - 1) // fl.batch_size)),
+                    lora=jax.tree.map(jnp.copy, init_lora),
+                    opt_state=self.opt_init(init_lora),
+                )
+            )
+
+        self.gal_layers: Optional[np.ndarray] = None  # bool (L_logical,)
+        self._gal_mask_tree = None
+        self._jit_cache: Dict[str, Any] = {}
+
+        # bytes accounting (paper §5.6): LoRA params up+down per round
+        self.comm_bytes_per_round: List[int] = []
+
+    # ------------------------------------------------------------------
+    # jitted primitives
+    # ------------------------------------------------------------------
+
+    def _grad_step(self):
+        if "grad_step" not in self._jit_cache:
+
+            def step(params, lora, opt_state, batch, lr, mask):
+                loss, grads = jax.value_and_grad(
+                    lambda lo: self.loss_fn(params, lo, batch)
+                )(lora)
+                new_lora, new_opt = self.opt_update(grads, opt_state, lora, lr, mask)
+                return loss, new_lora, new_opt
+
+            self._jit_cache["grad_step"] = jax.jit(step)
+        return self._jit_cache["grad_step"]
+
+    def _sample_scores(self):
+        if "sample_scores" not in self._jit_cache:
+            self._jit_cache["sample_scores"] = jax.jit(
+                lambda params, lora, batch: fish.per_sample_fisher_scores(
+                    self.loss_fn, params, lora, batch
+                )
+            )
+        return self._jit_cache["sample_scores"]
+
+    def _fim_diag(self):
+        if "fim_diag" not in self._jit_cache:
+            self._jit_cache["fim_diag"] = jax.jit(
+                lambda params, lora, batch: fish.fim_diag(
+                    self.loss_fn, params, lora, batch
+                )
+            )
+        return self._jit_cache["fim_diag"]
+
+    def _batch_loss(self):
+        if "batch_loss" not in self._jit_cache:
+            self._jit_cache["batch_loss"] = jax.jit(self.loss_fn)
+        return self._jit_cache["batch_loss"]
+
+    # ------------------------------------------------------------------
+    # initialization phase (Alg. 1 lines 1-10)
+    # ------------------------------------------------------------------
+
+    def _client_batch(self, client: ClientState, batch_ids: np.ndarray):
+        return gather_batch(client.data, batch_ids)
+
+    def _batch_difficulty(self, client: ClientState) -> np.ndarray:
+        metric = self.difficulty_metric
+        scores = np.zeros(len(client.batches))
+        for j, ids in enumerate(client.batches):
+            batch = self._client_batch(client, ids)
+            if metric == "fisher":
+                s = self._sample_scores()(self.params, client.lora, batch)
+                scores[j] = float(jnp.sum(s))  # Formula 17
+            elif metric == "loss":  # SE/inference-loss heuristic baseline
+                scores[j] = float(self._batch_loss()(self.params, client.lora, batch))
+            elif metric == "length":  # Shortformer/SLW-style static heuristic
+                scores[j] = float(np.sum(batch["tokens"] != 0))
+            elif metric == "random":
+                scores[j] = self.rng.random()
+            else:
+                raise ValueError(metric)
+        return scores
+
+    def init_phase(self, *, probe_batches: int = 1) -> None:
+        fl = self.fl
+        logits_loss = make_logits_loss(self.cfg)
+        layer_scores_all, fractions, ns = [], [], []
+        for ci, client in enumerate(self.clients):
+            # --- curriculum difficulty (lines 2-5) ---
+            client.difficulty = self._batch_difficulty(client)
+            client.order = curr.order_batches(client.difficulty, self.schedule.strategy)
+
+            # --- layer sensitivity scores (Eq. 9-10) ---
+            ids = client.batches[int(client.order[0])]
+            batch = self._client_batch(client, ids)
+            noise_shape = self._noise_shape(batch)
+            scores = galmod.layer_sensitivity_scores(
+                self.model.forward_probe,
+                logits_loss,
+                self.params,
+                client.lora,
+                batch,
+                gamma=fl.noise_budget,
+                p=fl.norm_p,
+                noise_shape=noise_shape,
+            )
+            client.layer_scores = np.asarray(scores)
+            layer_scores_all.append(client.layer_scores)
+            ns.append(client.n)
+
+            # --- lossless fraction (only if not overridden; costly) ---
+            if fl.gal_fraction is None or fl.sparse_ratio is None:
+                client.lossless_fraction = galmod.lossless_rank_fraction(
+                    self.loss_fn,
+                    self.params,
+                    client.lora,
+                    batch,
+                    jax.random.fold_in(self.key, 1000 + ci),
+                    iters=fl.lanczos_iters,
+                )
+            fractions.append(
+                client.lossless_fraction if fl.gal_fraction is None else fl.gal_fraction
+            )
+
+        # --- server: GAL selection (lines 6-7) ---
+        global_scores = galmod.aggregate_layer_scores(layer_scores_all, ns)
+        L = len(global_scores)
+        n_star = galmod.gal_layer_count(fractions, ns, L, fl.mu_global_local)
+        self.gal_layers = self._select_layers(global_scores, n_star)
+        self._gal_mask_tree = gal_mask_tree(self.cfg, self.global_lora, self.gal_layers)
+
+        # --- local update parameter selection (lines 8-10) ---
+        if self.sparse_update:
+            for ci, client in enumerate(self.clients):
+                fim = None
+                for e in range(fl.fim_warmup_epochs):
+                    ids = client.batches[int(client.order[min(e, len(client.order) - 1)])]
+                    batch = self._client_batch(client, ids)
+                    new = self._fim_diag()(self.params, client.lora, batch)
+                    fim = fish.fim_momentum_update(fim, new, fl.fim_momentum)
+                client.fim = fim
+                importance = sparsemod.neuron_importance(fim)
+                rho = (
+                    fl.sparse_ratio
+                    if fl.sparse_ratio is not None
+                    else client.lossless_fraction
+                )
+                keep = sparsemod.select_neuron_masks(importance, rho)
+                client.neuron_mask = neuron_mask_tree(self.cfg, client.lora, keep)
+
+    def _noise_shape(self, batch) -> tuple:
+        B, T = batch["tokens"].shape
+        S = T + (self.cfg.num_prefix_embeddings if self.cfg.family == "vlm" else 0)
+        return (B, S, self.cfg.d_model)
+
+    def _select_layers(self, global_scores: np.ndarray, n_star: int) -> np.ndarray:
+        L = len(global_scores)
+        mode = self.gal_mode
+        if mode == "full":
+            return np.ones(L, bool)
+        if mode == "random":
+            mask = np.zeros(L, bool)
+            mask[self.rng.choice(L, n_star, replace=False)] = True
+            return mask
+        if mode == "ascending":  # ablation AO: *least* important layers
+            order = np.argsort(global_scores)
+            mask = np.zeros(L, bool)
+            mask[order[:n_star]] = True
+            return mask
+        if mode in ("importance", "descending"):  # DO == ours' ordering
+            return galmod.select_gal_layers(global_scores, n_star)
+        raise ValueError(mode)
+
+    # ------------------------------------------------------------------
+    # tuning phase (Alg. 1 lines 11-19)
+    # ------------------------------------------------------------------
+
+    def _merge_global(self, client: ClientState):
+        """Line 15: overwrite the GAL part of the client's LoRA."""
+        m = self._gal_mask_tree
+        client.lora = jax.tree.map(
+            lambda g, l, mm: mm * g + (1.0 - mm) * l, self.global_lora, client.lora, m
+        )
+
+    def run_round(self, t: int, lr: Optional[float] = None) -> Dict[str, float]:
+        fl = self.fl
+        lr = fl.learning_rate if lr is None else lr
+        k = min(fl.devices_per_round, len(self.clients))
+        chosen = self.rng.choice(len(self.clients), k, replace=False)
+        losses = []
+        updates, weights = [], []
+        step = self._grad_step()
+        for ci in chosen:
+            client = self.clients[ci]
+            self._merge_global(client)
+            sel = curr.selected_batch_ids(self.schedule, t, client.order)
+            for _ in range(fl.local_epochs):
+                for j in sel:
+                    ids = client.batches[int(j)]
+                    batch = self._client_batch(client, ids)
+                    loss, client.lora, client.opt_state = step(
+                        self.params, client.lora, client.opt_state, batch, lr,
+                        client.neuron_mask,
+                    )
+                    losses.append(float(loss))
+            updates.append(client.lora)
+            weights.append(client.n)
+
+        # --- server aggregation over GAL (line 18, FedAvg) ---
+        w = np.asarray(weights, np.float64)
+        w = w / w.sum()
+        m = self._gal_mask_tree
+
+        def agg(g_old, mask, *client_loras):
+            acc = sum(wi * cl for wi, cl in zip(w, client_loras))
+            return mask * acc + (1.0 - mask) * g_old
+
+        self.global_lora = jax.tree.map(agg, self.global_lora, m, *updates)
+
+        # comm accounting: GAL LoRA up+down per participating device
+        gal_bytes = int(
+            sum(
+                float(jnp.sum(mm)) * 4  # f32
+                for mm in jax.tree.leaves(m)
+            )
+        )
+        self.comm_bytes_per_round.append(2 * k * gal_bytes)
+        return {
+            "loss": float(np.mean(losses)) if losses else float("nan"),
+            "selected_batches": float(len(sel)),
+            "comm_bytes": float(self.comm_bytes_per_round[-1]),
+        }
+
+    # ------------------------------------------------------------------
+    # evaluation
+    # ------------------------------------------------------------------
+
+    def evaluate(self, data: Dict[str, np.ndarray], batch_size: int = 32) -> float:
+        """Accuracy with the *server* model (GAL part global, rest zeros)."""
+        if "eval" not in self._jit_cache:
+
+            def predict(params, lora, batch):
+                logits, _ = self.model.forward(params, lora, batch)
+                if self.cfg.family == "encoder":
+                    return jnp.argmax(logits, -1)
+                return jnp.argmax(logits[:, -1], -1)
+
+            self._jit_cache["eval"] = jax.jit(predict)
+        predict = self._jit_cache["eval"]
+        n = len(next(iter(data.values())))
+        correct, total = 0, 0
+        for i in range(0, n, batch_size):
+            batch = {kk: v[i : i + batch_size] for kk, v in data.items()}
+            pred = np.asarray(predict(self.params, self.global_lora, batch))
+            gold = batch["labels"] if self.cfg.family == "encoder" else batch["label_token"]
+            correct += int((pred == gold).sum())
+            total += len(gold)
+        return correct / max(total, 1)

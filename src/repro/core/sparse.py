@@ -1,0 +1,66 @@
+"""Local update parameter selection (paper §4.3.2).
+
+Momentum-averaged diag-FIM → neuron-wise aggregation (Eq. 12) → keep the
+top-ρ neurons per layer trainable, freeze the rest. A "neuron" is an output
+unit of the full weight matrix; under LoRA (our ``y = x@W + (x@a)@b``
+convention) neuron μ maps to column μ of ``b``, so its score is
+``Σ_r F[b][l, r, μ]`` and freezing masks that column's updates
+(repro.lora.neuron_mask_tree).
+
+ρ_{k,l} comes from the same lossless eigengap criterion as GAL count
+(paper: ρ = 1 − r_{k,l}/R_{k,l}); a direct override is supported.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def neuron_importance(fim_tree) -> Dict[str, Any]:
+    """Per-target neuron scores from a momentum diag-FIM over the LoRA tree.
+
+    fim_tree: {group: {target: {"a": F_a, "b": F_b}}}. Returns
+    {group: {target: scores (L, d_out) or (d_out,)}} — sum of the FIM mass
+    attributable to each output neuron (Eq. 12 adapted to LoRA; the shared
+    ``a`` factor spreads uniformly so only ``b`` distinguishes neurons).
+    """
+    out: Dict[str, Any] = {}
+    for group, targets in fim_tree.items():
+        g = {}
+        for t, ab in targets.items():
+            fb = ab["b"]
+            g[t] = jnp.sum(fb, axis=-2)  # (L, d_out) or (d_out,)
+        out[group] = g
+    return out
+
+
+def select_neuron_masks(
+    importance: Dict[str, Any],
+    rho: float,
+) -> Dict[str, Any]:
+    """Keep the top-ρ fraction of neurons per (layer, target). Returns
+    {group: {target: keep-mask (L, d_out) or (d_out,)}} float 0/1 arrays."""
+    out: Dict[str, Any] = {}
+    for group, targets in importance.items():
+        g = {}
+        for t, scores in targets.items():
+            d_out = scores.shape[-1]
+            k = max(1, int(round(rho * d_out)))
+            # threshold per layer: the k-th largest score
+            thresh = jnp.sort(scores, axis=-1)[..., d_out - k]
+            g[t] = (scores >= thresh[..., None]).astype(jnp.float32)
+        out[group] = g
+    return out
+
+
+def mask_sparsity(neuron_masks: Dict[str, Any]) -> float:
+    """Fraction of neurons kept (for logging / comm-cost accounting)."""
+    total, kept = 0, 0.0
+    for group in neuron_masks.values():
+        for m in group.values():
+            total += int(np.prod(m.shape))
+            kept += float(jnp.sum(m))
+    return kept / max(total, 1)

@@ -1,0 +1,30 @@
+"""Host-side batching utilities for the FL simulation and examples."""
+from __future__ import annotations
+
+from typing import Dict, Iterator, List
+
+import numpy as np
+
+
+def make_batches(n: int, batch_size: int, *, drop_remainder: bool = False) -> List[np.ndarray]:
+    """Contiguous index batches [0..n). The FL sim scores/sorts these."""
+    ids = np.arange(n)
+    batches = [ids[i : i + batch_size] for i in range(0, n, batch_size)]
+    if drop_remainder and batches and len(batches[-1]) < batch_size:
+        batches = batches[:-1]
+    return batches
+
+
+def gather_batch(data: Dict[str, np.ndarray], idx: np.ndarray) -> Dict[str, np.ndarray]:
+    return {k: v[idx] for k, v in data.items()}
+
+
+def batch_iterator(
+    data: Dict[str, np.ndarray], batch_size: int, *, seed: int = 0, epochs: int = 1
+) -> Iterator[Dict[str, np.ndarray]]:
+    n = len(next(iter(data.values())))
+    rng = np.random.default_rng(seed)
+    for _ in range(epochs):
+        perm = rng.permutation(n)
+        for i in range(0, n - batch_size + 1, batch_size):
+            yield gather_batch(data, perm[i : i + batch_size])

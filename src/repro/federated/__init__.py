@@ -1,0 +1,1 @@
+from repro.federated.baselines import BASELINES, make_runner, run_experiment

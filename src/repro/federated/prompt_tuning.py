@@ -1,0 +1,105 @@
+"""FedPrompt-style baseline: federated soft-prompt tuning (Zhao et al. 2023).
+
+Instead of LoRA, each client trains a soft prompt (n_prompt, d_model)
+prepended to the input embeddings; the server FedAvgs the prompt. Far fewer
+parameters than LoRA (the paper's Table 13 comm numbers) but lower accuracy
+(Table 1) — we reproduce both directions in benchmarks/table1_accuracy.py.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import FibecFedConfig
+from repro.data.pipeline import gather_batch, make_batches
+from repro.models.model_api import ModelFns
+from repro.train.losses import label_token_loss
+
+
+class FedPrompt:
+    def __init__(
+        self,
+        model: ModelFns,
+        fl: FibecFedConfig,
+        client_data: Sequence[Dict[str, np.ndarray]],
+        *,
+        n_prompt: int = 16,
+        seed: int = 0,
+    ):
+        assert model.cfg.family in ("dense", "moe", "vlm"), "prompt tuning needs a decoder"
+        self.model = model
+        self.fl = fl
+        self.rng = np.random.default_rng(seed)
+        key = jax.random.PRNGKey(seed)
+        self.params = model.init_params(jax.random.fold_in(key, 0))
+        self.lora = jax.tree.map(
+            jnp.zeros_like, model.init_lora(jax.random.fold_in(key, 1))
+        )  # frozen zero LoRA — base model only
+        self.prompt = (
+            jax.random.normal(jax.random.fold_in(key, 2), (n_prompt, model.cfg.d_model))
+            * 0.02
+        ).astype(jnp.float32)
+        self.clients = [
+            {"data": cd, "n": len(next(iter(cd.values()))),
+             "batches": make_batches(len(next(iter(cd.values()))), fl.batch_size)}
+            for cd in client_data
+        ]
+        self.comm_bytes_per_round: List[int] = []
+
+        def loss(prompt, params, lora, batch):
+            B = batch["tokens"].shape[0]
+            prefix = jnp.broadcast_to(
+                prompt[None], (B, *prompt.shape)
+            ).astype(jnp.dtype(model.cfg.dtype))
+            logits, aux = model.forward(
+                params, lora, {**batch, "prefix_embeds": prefix}
+            )
+            return label_token_loss(logits, batch["label_token"]) + aux
+
+        self._step = jax.jit(
+            lambda prompt, params, lora, batch, lr: (
+                lambda l, g: (l, prompt - lr * g)
+            )(*jax.value_and_grad(loss)(prompt, params, lora, batch))
+        )
+        self._loss = loss
+
+    def run_round(self, t: int) -> Dict[str, float]:
+        fl = self.fl
+        k = min(fl.devices_per_round, len(self.clients))
+        chosen = self.rng.choice(len(self.clients), k, replace=False)
+        new_prompts, weights, losses = [], [], []
+        for ci in chosen:
+            c = self.clients[ci]
+            prompt = self.prompt
+            for ids in c["batches"]:
+                batch = gather_batch(c["data"], ids)
+                loss, prompt = self._step(prompt, self.params, self.lora, batch, fl.learning_rate)
+                losses.append(float(loss))
+            new_prompts.append(prompt)
+            weights.append(c["n"])
+        w = np.asarray(weights, np.float64)
+        w /= w.sum()
+        self.prompt = sum(wi * p for wi, p in zip(w, new_prompts))
+        self.comm_bytes_per_round.append(2 * k * int(np.prod(self.prompt.shape)) * 4)
+        return {"loss": float(np.mean(losses))}
+
+    def evaluate(self, data: Dict[str, np.ndarray], batch_size: int = 32) -> float:
+        def predict(prompt, params, lora, batch):
+            B = batch["tokens"].shape[0]
+            prefix = jnp.broadcast_to(prompt[None], (B, *prompt.shape)).astype(
+                jnp.dtype(self.model.cfg.dtype)
+            )
+            logits, _ = self.model.forward(params, lora, {**batch, "prefix_embeds": prefix})
+            return jnp.argmax(logits[:, -1], -1)
+
+        predict = jax.jit(predict)
+        n = len(next(iter(data.values())))
+        correct = 0
+        for i in range(0, n, batch_size):
+            batch = {kk: v[i : i + batch_size] for kk, v in data.items()}
+            pred = np.asarray(predict(self.prompt, self.params, self.lora, batch))
+            correct += int((pred == batch["label_token"]).sum())
+        return correct / n

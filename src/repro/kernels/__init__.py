@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for FibecFed's compute hot-spots.
+
+Each kernel module pairs with an oracle in :mod:`repro.kernels.ref` and a
+jit'd public wrapper in :mod:`repro.kernels.ops`. On this CPU container the
+kernels execute under ``interpret=True`` (set ``REPRO_PALLAS_INTERPRET=0``
+on real TPU); tests sweep shapes/dtypes against the oracles.
+"""
+from repro.kernels.ops import (
+    fisher_diag_update,
+    sparse_lora_apply,
+    flash_attention,
+    ssd_chunk_intra,
+)

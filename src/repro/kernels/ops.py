@@ -1,0 +1,102 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Each wrapper handles padding/reshaping to kernel tile constraints and falls
+back to the oracle for shapes below one tile. ``REPRO_PALLAS_INTERPRET``
+(default on — this container is CPU) switches interpret mode.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import fisher_diag as _fd
+from repro.kernels import flash_attention as _fa
+from repro.kernels import ref as _ref
+from repro.kernels import sparse_lora as _sl
+from repro.kernels import ssd_chunk as _sc
+
+
+def _interpret() -> bool:
+    return os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+
+def _pad_to(x: jax.Array, axis: int, multiple: int):
+    size = x.shape[axis]
+    pad = (-size) % multiple
+    if pad == 0:
+        return x, size
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), size
+
+
+@functools.partial(jax.jit, static_argnames=("momentum",))
+def fisher_diag_update(fim, g, momentum: float = 0.9):
+    """Momentum diag-FIM update over an arbitrary pytree (leaf-wise kernel)."""
+
+    def one(f_leaf, g_leaf):
+        flat = g_leaf.reshape(-1)
+        n = flat.shape[0]
+        cols = _fd.BLOCK_COLS
+        rows_needed = -(-n // cols)
+        rows = max(_fd.BLOCK_ROWS, -(-rows_needed // _fd.BLOCK_ROWS) * _fd.BLOCK_ROWS)
+        padded = rows * cols
+        g2 = jnp.pad(flat, (0, padded - n)).reshape(rows, cols)
+        f2 = jnp.pad(f_leaf.reshape(-1), (0, padded - n)).reshape(rows, cols)
+        out = _fd.fisher_diag_update_2d(g2, f2, momentum, interpret=_interpret())
+        return out.reshape(-1)[:n].reshape(g_leaf.shape)
+
+    return jax.tree.map(one, fim, g)
+
+
+@functools.partial(jax.jit, static_argnames=("scale",))
+def sparse_lora_apply(x, a, b, mask, scale: float = 1.0):
+    """y = (x @ a) @ (b ⊙ mask) · scale. x (..., K); a (K, r); b (r, N)."""
+    lead = x.shape[:-1]
+    K = x.shape[-1]
+    r, N = b.shape
+    x2 = x.reshape(-1, K)
+    M = x2.shape[0]
+    if M % _sl.BM or N % _sl.BN or K % _sl.BK:
+        # pad to tiles
+        x2, _ = _pad_to(x2, 0, _sl.BM)
+        x2, _ = _pad_to(x2, 1, _sl.BK)
+        a_p, _ = _pad_to(a, 0, _sl.BK)
+        b_p, _ = _pad_to(b, 1, _sl.BN)
+        m_p, _ = _pad_to(mask, 0, _sl.BN)
+        y = _sl.sparse_lora_matmul(x2, a_p, b_p, m_p, scale, interpret=_interpret())
+        y = y[:M, :N]
+    else:
+        y = _sl.sparse_lora_matmul(x2, a, b, mask, scale, interpret=_interpret())
+    return y.reshape(*lead, N)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window"))
+def flash_attention(q, k, v, *, causal: bool = True, window=None):
+    """GQA flash attention. q (B,S,H,D); k/v (B,S,KVH,D). Returns q-shaped."""
+    B, S, H, D = q.shape
+    KVH = k.shape[2]
+    G = H // KVH
+    # fold heads: broadcast kv across the group then flatten (B,H)
+    kq = jnp.repeat(k, G, axis=2) if G > 1 else k
+    vq = jnp.repeat(v, G, axis=2) if G > 1 else v
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    kf = kq.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    vf = vq.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    if S % _fa.QB:
+        out = _ref.flash_attention_ref(qf, kf, vf, causal=causal, window=window)
+    else:
+        out = _fa.flash_attention_bhsd(
+            qf, kf, vf, causal=causal, window=window, interpret=_interpret()
+        )
+    return out.reshape(B, H, S, D).transpose(0, 2, 1, 3)
+
+
+@jax.jit
+def ssd_chunk_intra(x, a, b, c):
+    """Intra-chunk SSD. x (G,Q,hd), a (G,1,Q), b/c (G,Q,N) -> (G,Q,hd) f32."""
+    return _sc.ssd_chunk_intra_kernel(x, a, b, c, interpret=_interpret())

@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def fisher_diag_update_ref(g: jax.Array, fim: jax.Array, momentum: float) -> jax.Array:
+    gf = g.astype(jnp.float32)
+    return momentum * fim.astype(jnp.float32) + (1.0 - momentum) * gf * gf
+
+
+def sparse_lora_matmul_ref(
+    x: jax.Array, a: jax.Array, b: jax.Array, mask: jax.Array, scale: float = 1.0
+) -> jax.Array:
+    xa = jnp.dot(x.astype(jnp.float32), a.astype(jnp.float32))
+    bm = b.astype(jnp.float32) * mask.astype(jnp.float32)[None, :]
+    return (scale * jnp.dot(xa, bm)).astype(x.dtype)
+
+
+def flash_attention_ref(
+    q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True, window=None
+) -> jax.Array:
+    """(BH, S, D) exact softmax attention."""
+    BH, S, D = q.shape
+    s = jnp.einsum(
+        "bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) / (D**0.5)
+    q_pos = jnp.arange(S)[:, None]
+    k_pos = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_chunk_intra_ref(
+    x: jax.Array, a: jax.Array, b: jax.Array, c: jax.Array
+) -> jax.Array:
+    """x (G,Q,hd), a (G,1,Q), b/c (G,Q,N) -> (G,Q,hd) f32."""
+    cs = jnp.cumsum(a[:, 0].astype(jnp.float32), axis=-1)  # (G, Q)
+    diff = cs[:, :, None] - cs[:, None, :]
+    Q = x.shape[1]
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.exp(jnp.where(tri[None], diff, NEG_INF))
+    scores = jnp.einsum(
+        "gis,gjs->gij", c.astype(jnp.float32), b.astype(jnp.float32)
+    )
+    return jnp.einsum("gij,gjd->gid", L * scores, x.astype(jnp.float32))

@@ -1,0 +1,76 @@
+"""Row-sparse (neuron-masked) LoRA apply kernel.
+
+FibecFed freezes all but the top-ρ output neurons of each LoRA target
+(§4.3.2). Structurally that means only ρ·d_out columns of ``b`` contribute
+to the delta. This kernel computes ``y = (x @ a) @ (b ⊙ mask) * scale``
+with the rank-r intermediate held in VMEM scratch and the column mask
+applied as the b-tile is loaded — the masked columns never hit the MXU as
+useful work on TPU (they are zero-multiplied inside the tile; for ρ ≤ 0.5
+a gather-packed variant would skip them entirely — see DESIGN.md §Perf).
+
+Grid: (M/bm, N/bn, K/bk); the k-axis accumulates x@a into scratch, the
+last k step multiplies by the masked b tile and writes out.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BM, BN, BK = 128, 128, 512
+
+
+def _kernel(x_ref, a_ref, b_ref, mask_ref, o_ref, xa_ref, *, nk: int, scale: float):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        xa_ref[...] = jnp.zeros_like(xa_ref)
+
+    xa_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        a_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == nk - 1)
+    def _finish():
+        b = b_ref[...].astype(jnp.float32) * mask_ref[...].astype(jnp.float32)
+        o_ref[...] = (scale * jnp.dot(xa_ref[...], b, preferred_element_type=jnp.float32)).astype(
+            o_ref.dtype
+        )
+
+
+def sparse_lora_matmul(
+    x: jax.Array,  # (M, K)
+    a: jax.Array,  # (K, r)
+    b: jax.Array,  # (r, N)
+    mask: jax.Array,  # (N,) column keep-mask
+    scale: float = 1.0,
+    *,
+    interpret: bool = True,
+) -> jax.Array:
+    M, K = x.shape
+    r = a.shape[1]
+    N = b.shape[1]
+    assert M % BM == 0 and N % BN == 0 and K % BK == 0, (M, N, K)
+    nk = K // BK
+    grid = (M // BM, N // BN, nk)
+    kernel = functools.partial(_kernel, nk=nk, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BM, BK), lambda m, n, k: (m, k)),  # x
+            pl.BlockSpec((BK, r), lambda m, n, k: (k, 0)),  # a
+            pl.BlockSpec((r, BN), lambda m, n, k: (0, n)),  # b
+            pl.BlockSpec((1, BN), lambda m, n, k: (0, n)),  # mask (row-vector)
+        ],
+        out_specs=pl.BlockSpec((BM, BN), lambda m, n, k: (m, n)),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        scratch_shapes=[pltpu.VMEM((BM, r), jnp.float32)],
+        interpret=interpret,
+    )(x, a, b, mask.reshape(1, N))

@@ -1,0 +1,286 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("REPRO_DRYRUN_XLA_FLAGS")
+    or "--xla_force_host_platform_device_count=512"
+)
+# NOTE: the two lines above MUST run before any other import (jax locks the
+# device count at first init). Everything below is ordinary code.
+
+"""Multi-pod dry-run: lower + compile every (arch × input-shape × mesh).
+
+For each combination this builds the real distributed step function
+(FibecFed train step / prefill / one-token decode), binds the production
+shardings, and runs ``.lower().compile()`` against ShapeDtypeStruct inputs —
+no allocation, but full GSPMD partitioning + memory/cost analysis. Failures
+here (sharding mismatch, OOM at compile, unsupported collective) are bugs.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-0.5b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out experiments/dryrun]
+"""
+import argparse
+import dataclasses
+import functools
+import json
+import time
+import traceback
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import InputShape, ModelConfig
+from repro.configs import ARCHS, ASSIGNED, INPUT_SHAPES, get_config, get_shape
+from repro.launch import analysis as ana
+from repro.launch import shardings as shd
+from repro.launch.mesh import dp_axes, make_production_mesh, num_client_groups
+from repro.launch.steps import build_decode_step, build_prefill_step, build_train_step, make_train_state
+from repro.models import build_model
+from repro.utils import tree_bytes
+
+
+def _with_sharding(sds_tree, sharding_tree):
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        sds_tree,
+        sharding_tree,
+    )
+
+
+def _eval_shape(fn, *args):
+    return jax.eval_shape(fn, *args)
+
+
+def dryrun_one(
+    arch: str, shape_name: str, *, multi_pod: bool = False, verbose: bool = True,
+    debug_mesh: bool = False, reduced: bool = False, overrides: Dict[str, Any] = None,
+    layout: str = "tp",
+) -> Dict[str, Any]:
+    """layout: "tp" (default: tensor parallel on the model axis) or "dp_only"
+    (replicate the base model, use every mesh axis as FL-client data
+    parallelism — the §Perf-C scheme for sub-1B models where 16-way TP is
+    all overhead)."""
+    cfg = get_config(arch)
+    if reduced:  # wiring tests only — NOT the production dry-run
+        cfg = cfg.reduced()
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = get_shape(shape_name)
+    if reduced:
+        shape = dataclasses.replace(
+            shape, seq_len=min(shape.seq_len, 512), global_batch=min(shape.global_batch, 8)
+        )
+    model = build_model(cfg)
+    if debug_mesh:
+        mesh = jax.make_mesh((2, 2), ("data", "model"))
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(list(mesh.shape.values())))
+    dp = dp_axes(mesh) if layout == "tp" else tuple(mesh.axis_names)
+    n_groups = 1
+    for a in dp:
+        n_groups *= mesh.shape[a]
+    if layout == "dp_only":
+        n_groups = min(n_groups, shape.global_batch)
+        # client axis must tile the batch exactly; fold axes until it fits
+        while shape.global_batch % n_groups:
+            n_groups //= 2
+    from repro.models import sharding_ctx
+
+    sharding_ctx.set_mesh_axes(dp, enabled=True)
+    record: Dict[str, Any] = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": dict(mesh.shape),
+        "chips": chips,
+        "multi_pod": multi_pod,
+    }
+    if not model.supports(shape):
+        record["status"] = "skipped"
+        record["reason"] = (
+            "encoder-only: no decode"
+            if cfg.family == "encoder"
+            else "long-context decode requires sub-quadratic attention"
+        )
+        return record
+
+    rng = jax.random.PRNGKey(0)
+    params_sds = _eval_shape(model.init_params, rng)
+    if layout == "dp_only":
+        params_sh = shd.replicated(mesh, params_sds)
+    else:
+        params_sh = shd.base_param_shardings(
+            mesh, params_sds, moe_token_parallel=cfg.moe_token_parallel
+        )
+    params_in = _with_sharding(params_sds, params_sh)
+    batch_sds = model.input_specs(shape)
+    t0 = time.perf_counter()
+
+    with mesh:
+        if shape.kind == "train":
+            state_sds = _eval_shape(
+                functools.partial(make_train_state, model, n_groups=n_groups), rng
+            )
+            if layout == "dp_only":
+                gal_sh = shd.replicated(mesh, state_sds["gal_lora"])
+                local_sh = shd.shardings_for(
+                    mesh, state_sds["local_lora"],
+                    lambda p, l: shd.batch_spec(p, l, dp, n_groups),
+                )
+            else:
+                gal_sh = shd.lora_shardings(mesh, state_sds["gal_lora"])
+                local_sh = shd.lora_shardings(
+                    mesh, state_sds["local_lora"], client_axes=dp
+                )
+            state_sh = {
+                "gal_lora": gal_sh, "gal_m": gal_sh, "gal_v": gal_sh,
+                "gal_mask": gal_sh,
+                "local_lora": local_sh, "local_m": local_sh, "local_v": local_sh,
+                "local_mask": local_sh,
+                "step": shd.replicated(mesh, state_sds["step"]),
+            }
+            state_in = _with_sharding(state_sds, state_sh)
+            batch_sh = shd.batch_shardings(mesh, batch_sds, dp)
+            batch_in = _with_sharding(batch_sds, batch_sh)
+            step = build_train_step(model, n_groups)
+            jitted = jax.jit(step, donate_argnums=(1,))
+            lowered = jitted.lower(params_in, state_in, batch_in)
+        elif shape.kind == "prefill":
+            lora_sds = _eval_shape(model.init_lora, rng)
+            lora_sh = shd.lora_shardings(mesh, lora_sds)
+            lora_in = _with_sharding(lora_sds, lora_sh)
+            batch_sh = shd.batch_shardings(mesh, batch_sds, dp)
+            batch_in = _with_sharding(batch_sds, batch_sh)
+            step = build_prefill_step(model, cache_len=shape.seq_len)
+            lowered = jax.jit(step).lower(params_in, lora_in, batch_in)
+        else:  # decode
+            lora_sds = _eval_shape(model.init_lora, rng)
+            lora_sh = shd.lora_shardings(mesh, lora_sds)
+            lora_in = _with_sharding(lora_sds, lora_sh)
+            cache_len = (
+                min(shape.seq_len, cfg.attention_window or shape.seq_len)
+                if shape.seq_len > 65536
+                else shape.seq_len
+            )
+            cache_sds = _eval_shape(
+                lambda: model.init_cache(shape.global_batch, cache_len)
+            )
+            cache_sh = shd.cache_shardings(mesh, cache_sds, dp, cfg)
+            cache_in = _with_sharding(cache_sds, cache_sh)
+            token_in = _with_sharding(
+                {"token": batch_sds["token"]},
+                shd.batch_shardings(mesh, {"token": batch_sds["token"]}, dp),
+            )["token"]
+            pos_in = jax.ShapeDtypeStruct((), jnp.int32)
+            step = build_decode_step(model)
+            lowered = jax.jit(step, donate_argnums=(3,)).lower(
+                params_in, lora_in, token_in, cache_in, pos_in
+            )
+        t_lower = time.perf_counter() - t0
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0 - t_lower
+
+    summary = ana.summarize_compiled(compiled, chips=chips)
+    n_params = tree_bytes(params_sds) // 2  # bf16
+    frac = ana.active_param_fraction(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        mf = 6.0 * n_params * frac * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        mf = 2.0 * n_params * frac * tokens
+    else:
+        tokens = shape.global_batch
+        mf = 2.0 * n_params * frac * tokens
+    hlo_global = summary["hlo_flops"] * chips
+    record.update(
+        status="ok",
+        lower_s=round(t_lower, 2),
+        compile_s=round(t_compile, 2),
+        n_params=n_params,
+        active_fraction=frac,
+        model_flops=mf,
+        useful_fraction=(mf / hlo_global) if hlo_global else None,
+        **summary,
+    )
+    if verbose:
+        r = summary["roofline"]
+        print(
+            f"{arch:28s} {shape_name:12s} chips={chips:3d} "
+            f"compute={r['compute_s']:.4f}s memory={r['memory_s']:.4f}s "
+            f"collective={r['collective_s']:.4f}s dominant={r['dominant']} "
+            f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)"
+        )
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument(
+        "--set", action="append", default=[],
+        help="ModelConfig override, e.g. --set remat=true --set attn_score_dtype=bfloat16",
+    )
+    ap.add_argument("--tag", default="", help="suffix for the output file")
+    ap.add_argument("--layout", default="tp", choices=["tp", "dp_only"])
+    args = ap.parse_args()
+
+    overrides: Dict[str, Any] = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        if v.lower() in ("true", "false"):
+            overrides[k] = v.lower() == "true"
+        else:
+            try:
+                overrides[k] = int(v)
+            except ValueError:
+                try:
+                    overrides[k] = float(v)
+                except ValueError:
+                    overrides[k] = v
+
+    os.makedirs(args.out, exist_ok=True)
+    combos = []
+    archs = ASSIGNED if (args.all or not args.arch) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                combos.append((arch, shape, mp))
+
+    failures = 0
+    for arch, shape, mp in combos:
+        tag = f"{arch}_{shape}_{'pod2' if mp else 'pod1'}".replace("/", "-")
+        if args.tag:
+            tag += f"_{args.tag}"
+        path = os.path.join(args.out, tag + ".json")
+        if os.path.exists(path):
+            print(f"skip cached {tag}")
+            continue
+        try:
+            rec = dryrun_one(
+                arch, shape, multi_pod=mp, overrides=overrides or None,
+                layout=args.layout,
+            )
+        except Exception as e:
+            traceback.print_exc()
+            rec = {
+                "arch": arch, "shape": shape, "multi_pod": mp,
+                "status": "failed", "error": f"{type(e).__name__}: {e}",
+            }
+            failures += 1
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=2, default=str)
+    print(f"done; {failures} failures")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

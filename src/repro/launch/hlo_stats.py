@@ -1,0 +1,290 @@
+"""Trip-count-aware static analysis of compiled (post-SPMD) HLO text.
+
+``compiled.cost_analysis()`` counts each ``while`` body ONCE regardless of
+its trip count — useless for scan-over-layers models (verified: a 2-layer
+and an 8-layer scanned stack report identical FLOPs). This module re-derives
+per-device costs from ``compiled.as_text()``:
+
+- computations are parsed into blocks; ``while`` ops carry
+  ``backend_config={"known_trip_count":{"n":...}}`` (XLA annotates scans),
+  and multipliers propagate through nested loops and ``calls=``/fusion edges;
+- **flops**: every ``dot`` op contributes 2·prod(lhs_shape)·prod(rhs_free),
+  scaled by its computation's multiplier (elementwise flops are ignored —
+  dots dominate transformer workloads);
+- **collective bytes**: result-shape bytes of all-reduce / all-gather /
+  reduce-scatter / all-to-all / collective-permute, trip-scaled (post-SPMD
+  shapes are per-device);
+- **memory traffic proxy**: trip-scaled sum of result-buffer bytes over all
+  non-trivial ops — every materialized buffer written once; reads are
+  assumed comparable. A documented proxy, not a simulator: good for
+  dominant-term identification and before/after comparisons (§Perf), not
+  absolute HBM seconds.
+"""
+from __future__ import annotations
+
+import json
+import re
+from collections import defaultdict, deque
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->.*\{\s*$")
+_ASSIGN = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+)$")
+_SHAPE = re.compile(r"^(?:\()?(\w+)\[([\d,]*)\]")
+_PARAM = re.compile(r"%?([\w.\-]+):\s*(?:\()?(\w+)\[([\d,]*)\]")
+_WHILE = re.compile(r"while\(.*?condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)", re.S)
+_CALLS = re.compile(r"calls=%?([\w.\-]+)")
+_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_DOT_OPERANDS = re.compile(r"\bdot\(%?([\w.\-]+),\s*%?([\w.\-]+)\)")
+_DIMS = {
+    "lb": re.compile(r"lhs_batch_dims=\{([\d,]*)\}"),
+    "lc": re.compile(r"lhs_contracting_dims=\{([\d,]*)\}"),
+}
+
+
+def _shape_info(text: str) -> Optional[Tuple[str, Tuple[int, ...]]]:
+    m = _SHAPE.match(text.strip())
+    if not m:
+        return None
+    dtype, dims = m.group(1), m.group(2)
+    if dtype not in _DTYPE_BYTES:
+        return None
+    shape = tuple(int(d) for d in dims.split(",")) if dims else ()
+    return dtype, shape
+
+
+def _nbytes(dtype: str, shape: Tuple[int, ...]) -> int:
+    n = 1
+    for d in shape:
+        n *= d
+    return n * _DTYPE_BYTES[dtype]
+
+
+class Computation:
+    def __init__(self, name: str, is_entry: bool):
+        self.name = name
+        self.is_entry = is_entry
+        self.shapes: Dict[str, Tuple[str, Tuple[int, ...]]] = {}
+        self.lines: List[str] = []
+        # (cond, body, trip) triples and called fusion computations
+        self.whiles: List[Tuple[str, str, int]] = []
+        self.calls: List[str] = []
+
+
+def parse_computations(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in hlo.splitlines():
+        hdr = _COMP_HDR.match(raw)
+        if hdr and raw.rstrip().endswith("{"):
+            cur = Computation(hdr.group(2), bool(hdr.group(1)))
+            comps[cur.name] = cur
+            for pm in _PARAM.finditer(hdr.group(3)):
+                if pm.group(2) in _DTYPE_BYTES:
+                    shape = tuple(int(d) for d in pm.group(3).split(",")) if pm.group(3) else ()
+                    cur.shapes[pm.group(1)] = (pm.group(2), shape)
+            continue
+        if cur is None:
+            continue
+        if raw.startswith("}"):
+            cur = None
+            continue
+        line = raw.strip()
+        cur.lines.append(line)
+        am = _ASSIGN.match(line)
+        if am:
+            si = _shape_info(am.group(2))
+            if si:
+                cur.shapes[am.group(1)] = si
+        if "while(" in line:
+            wm = _WHILE.search(line)
+            tm = _TRIP.search(line)
+            if wm:
+                cur.whiles.append((wm.group(1), wm.group(2), int(tm.group(1)) if tm else 1))
+        for cm in _CALLS.finditer(line):
+            cur.calls.append(cm.group(1))
+    return comps
+
+
+def computation_multipliers(
+    comps: Dict[str, Computation],
+) -> Tuple[Dict[str, float], Dict[str, float]]:
+    """Returns (mult_all, mult_mat).
+
+    mult_all counts every reachable execution (flops / collectives);
+    mult_mat only propagates through ENTRY/while edges — fusion bodies
+    (``calls=``) stay in registers/VMEM and must NOT count as HBM traffic.
+    """
+    mult: Dict[str, float] = defaultdict(float)
+    mat: Dict[str, float] = defaultdict(float)
+    roots = [c.name for c in comps.values() if c.is_entry] or list(comps)[:1]
+    for r in roots:
+        mult[r] = 1.0
+        mat[r] = 1.0
+    queue = deque(roots)
+    seen_edges = set()
+    while queue:
+        name = queue.popleft()
+        comp = comps.get(name)
+        if comp is None:
+            continue
+        m = mult[name]
+        mm = mat[name]
+        for cond, body, trip in comp.whiles:
+            for child, k in ((cond, trip), (body, trip)):
+                key = (name, child)
+                if key in seen_edges:
+                    continue
+                seen_edges.add(key)
+                mult[child] += m * k
+                mat[child] += mm * k
+                queue.append(child)
+        for child in comp.calls:
+            key = (name, child, "call")
+            if key in seen_edges:
+                continue
+            seen_edges.add(key)
+            mult[child] += m  # executes, but materializes nothing
+            queue.append(child)
+    return dict(mult), dict(mat)
+
+
+def _dot_flops(comp: Computation, line: str) -> float:
+    om = _DOT_OPERANDS.search(line)
+    if not om:
+        return 0.0
+    lhs = comp.shapes.get(om.group(1))
+    rhs = comp.shapes.get(om.group(2))
+    if not lhs or not rhs:
+        return 0.0
+    lb = _DIMS["lb"].search(line)
+    lc = _DIMS["lc"].search(line)
+    lbatch = [int(x) for x in lb.group(1).split(",")] if lb and lb.group(1) else []
+    lcontr = [int(x) for x in lc.group(1).split(",")] if lc and lc.group(1) else []
+    lhs_shape, rhs_shape = lhs[1], rhs[1]
+    prod_lhs = 1
+    for d in lhs_shape:
+        prod_lhs *= d
+    batch = 1
+    for i in lbatch:
+        batch *= lhs_shape[i] if i < len(lhs_shape) else 1
+    contract = 1
+    for i in lcontr:
+        contract *= lhs_shape[i] if i < len(lhs_shape) else 1
+    prod_rhs = 1
+    for d in rhs_shape:
+        prod_rhs *= d
+    rhs_free = prod_rhs / max(batch * contract, 1)
+    return 2.0 * prod_lhs * rhs_free
+
+
+def analyze_hlo(hlo: str) -> Dict[str, float]:
+    comps = parse_computations(hlo)
+    mult, mat = computation_multipliers(comps)
+    flops = 0.0
+    coll: Dict[str, float] = {c: 0.0 for c in _COLLECTIVES}
+    traffic = 0.0
+    for name, comp in comps.items():
+        m = mult.get(name, 0.0)
+        m_mat = mat.get(name, 0.0)
+        if m == 0.0:
+            continue
+        for line in comp.lines:
+            am = _ASSIGN.match(line)
+            if not am:
+                continue
+            rhs_txt = am.group(2)
+            si = _shape_info(rhs_txt)
+            if " dot(" in f" {rhs_txt}" or rhs_txt.startswith("dot("):
+                flops += m * _dot_flops(comp, line)
+            for ckind in _COLLECTIVES:
+                if re.search(rf"\b{ckind}(-start)?\(", rhs_txt) and f"{ckind}-done" not in rhs_txt:
+                    if si:
+                        coll[ckind] += m * _nbytes(*si)
+                    break
+            if m_mat:
+                traffic += m_mat * _traffic_bytes(comp, comps, rhs_txt, si)
+    return {
+        "flops": flops,
+        "memory_traffic_bytes": traffic,
+        "collective_bytes": sum(coll.values()),
+        "collectives": coll,
+    }
+
+
+_METADATA_NAME = re.compile(r'op_name="([^"]+)"')
+_OPCODE = re.compile(r"(?:^|\s|\))([a-z][\w\-]*)\(")
+_DUS_OPERANDS = re.compile(r"dynamic-update-slice\(%?([\w.\-]+),\s*%?([\w.\-]+)")
+
+# results that are aliases/bookkeeping, not HBM writes
+_NO_TRAFFIC = {
+    "tuple", "get-tuple-element", "parameter", "constant", "bitcast", "copy",
+    "iota", "while", "conditional", "broadcast", "reshape", "transpose-start",
+    "after-all", "custom-call-start",
+}
+
+
+def _opcode(rhs_txt: str):
+    m = _OPCODE.search(rhs_txt)
+    return m.group(1) if m else None
+
+
+def _traffic_bytes(comp: "Computation", comps, rhs_txt: str, si) -> float:
+    """HBM bytes written by this op (DUS is in-place: only the update slice)."""
+    op = _opcode(rhs_txt)
+    if op is None or op in _NO_TRAFFIC:
+        return 0.0
+    if op == "dynamic-update-slice":
+        dm = _DUS_OPERANDS.search(rhs_txt)
+        if dm:
+            upd = comp.shapes.get(dm.group(2))
+            if upd:
+                return float(_nbytes(*upd))
+        return 0.0
+    if op == "fusion":
+        cm = _CALLS.search(rhs_txt)
+        if cm and cm.group(1) in comps:
+            callee = comps[cm.group(1)]
+            for ln in callee.lines:
+                if ln.startswith("ROOT") and "dynamic-update-slice(" in ln:
+                    dm = _DUS_OPERANDS.search(ln)
+                    if dm:
+                        upd = callee.shapes.get(dm.group(2))
+                        if upd:
+                            return float(_nbytes(*upd))
+                    return 0.0
+    return float(_nbytes(*si)) if si else 0.0
+
+
+def top_traffic_ops(hlo: str, k: int = 25):
+    """The static 'profile': top-k HBM-traffic contributors, aggregated by
+    the JAX op_name metadata (trip-scaled, materialized buffers only)."""
+    comps = parse_computations(hlo)
+    _, mat = computation_multipliers(comps)
+    agg: Dict[str, float] = defaultdict(float)
+    for name, comp in comps.items():
+        m_mat = mat.get(name, 0.0)
+        if not m_mat:
+            continue
+        for line in comp.lines:
+            am = _ASSIGN.match(line)
+            if not am:
+                continue
+            rhs_txt = am.group(2)
+            si = _shape_info(rhs_txt)
+            b = _traffic_bytes(comp, comps, rhs_txt, si)
+            if not b:
+                continue
+            nm = _METADATA_NAME.search(line)
+            label = nm.group(1) if nm else am.group(1)
+            label = re.sub(r"[\d.]+$", "", label)
+            agg[label] += m_mat * b
+    return sorted(agg.items(), key=lambda kv: -kv[1])[:k]

@@ -1,0 +1,39 @@
+"""Production mesh construction.
+
+A TPU v5e pod slice of 256 chips is a (data=16, model=16) mesh; the two-pod
+production target adds a leading "pod" axis: (pod=2, data=16, model=16).
+FibecFed maps one FL *client group* to each (pod, data) index (DESIGN.md §2).
+
+Functions, not module constants — importing this module never touches jax
+device state (the dry-run sets XLA_FLAGS before the first jax call).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 2, model: int = 2):
+    """Small mesh over whatever devices exist (tests on CPU)."""
+    n = len(jax.devices())
+    data = min(data, max(1, n // model))
+    return jax.make_mesh((data, model) if data * model <= n else (1, 1), ("data", "model"))
+
+
+def dp_axes(mesh) -> Tuple[str, ...]:
+    """The data-parallel (client) axes of a mesh."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def num_client_groups(mesh) -> int:
+    out = 1
+    for a in dp_axes(mesh):
+        out *= mesh.shape[a]
+    return out

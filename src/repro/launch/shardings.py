@@ -1,0 +1,221 @@
+"""Sharding rules: pytree path → PartitionSpec for every tree in the system.
+
+Conventions (single pod: ("data", "model"); multi-pod adds "pod"):
+
+- batch / client axes → ("pod","data")  (one FL client group per index)
+- tensor parallel → "model": attention heads, d_ff, experts (expert
+  parallel), SSM heads, vocab
+- LoRA follows the base matrix: ``a`` shards its input dim, ``b`` its output
+  dim, rank is tiny and replicated
+- GAL (global) LoRA is replicated over the client axes — its gradient
+  all-reduce IS the paper's server aggregation; client-local LoRA carries a
+  leading client-group axis sharded over ("pod","data") so it never crosses
+  clients (zero collective bytes)
+
+Divisibility: input shardings must tile exactly, so :func:`_fit` drops any
+axis that does not divide its dim (mamba2's vocab 50280→replicated embed)
+and MoE falls back from expert-parallel to within-expert tensor parallel
+when E doesn't divide the model axis (granite's 40 experts). Documented
+waste, quantified in §Roofline.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config import ModelConfig
+from repro.utils import tree_map_with_path_str
+
+
+# ---------------------------------------------------------------------------
+# rule tables (matched against '/'-joined tree paths)
+# ---------------------------------------------------------------------------
+
+# (regex, spec builder taking (leaf_ndim, stacked: bool))
+# `stacked` = leading layer axis present (leaf under a "layers"/"mamba" stack)
+
+_MODEL_LAST = lambda nd: P(*([None] * (nd - 1) + ["model"]))
+_MODEL_SECOND_LAST = lambda nd: P(*([None] * (nd - 2) + ["model", None]))
+_REPL = lambda nd: P(*([None] * nd))
+
+
+_BASE_RULES = [
+    # embeddings / heads
+    (r"(^|/)embed$", _MODEL_LAST),  # (V, D) -> shard V? no: last dim D... see below
+    (r"(^|/)lm_head$", _MODEL_LAST),  # (D, V) shard vocab
+    (r"(^|/)cls_head$", _REPL),
+    # attention projections (stacked: (L, d_in, d_out))
+    (r"/w[qkv]$|/cw[qkv]$", _MODEL_LAST),  # shard heads (out dim)
+    (r"/wo$|/cwo$", _MODEL_SECOND_LAST),  # shard heads (in dim)
+    (r"/b[qkv]$|/cb[qkv]$", _MODEL_LAST),
+    # mlp
+    (r"/w_gate$|/w_up$|/w_in$", _MODEL_LAST),
+    (r"/w_down$|/w_out$", _MODEL_SECOND_LAST),
+    # MoE: experts sharded (expert parallel); router replicated
+    (r"/router$", _REPL),
+    (r"/e_(gate|up|down)$", lambda nd: P(*([None, "model"] + [None] * (nd - 2)))),
+    (r"/s_(gate|up)$", _MODEL_LAST),
+    (r"/s_down$", _MODEL_SECOND_LAST),
+    # SSM: shard the inner/channel dim
+    (r"/in_proj$", _MODEL_LAST),
+    (r"/out_proj$", _MODEL_SECOND_LAST),
+    (r"/conv_w$", _MODEL_LAST),
+    (r"/(A_log|D|dt_bias)$", _MODEL_LAST),
+    (r"/gate_norm_w$", _MODEL_LAST),
+    # norms & everything else small
+    (r".*", _REPL),
+]
+
+
+def base_param_spec(path: str, leaf, model_size: int = 16,
+                    moe_token_parallel: bool = False) -> P:
+    nd = np.ndim(leaf) if not hasattr(leaf, "ndim") else leaf.ndim
+    if re.search(r"(^|/)embed$", path):
+        # (V, D): shard vocab rows
+        return P(*(["model"] + [None] * (nd - 1)))
+    if re.search(r"/e_(gate|up|down)$", path) and nd >= 2:
+        # expert parallel when E divides the model axis; else fall back to
+        # tensor-parallel *within* experts (granite's 40 experts on 16-way)
+        E = leaf.shape[1]
+        if E % model_size == 0:
+            return P(*([None, "model"] + [None] * (nd - 2)))
+        if moe_token_parallel:
+            return _REPL(nd)  # replicate tiny experts; tokens shard instead
+        if path.endswith("e_down"):
+            return P(*([None] * (nd - 2) + ["model", None]))  # shard Fe (in)
+        return _MODEL_LAST(nd)  # shard Fe (out)
+    for pat, fn in _BASE_RULES:
+        if re.search(pat, path):
+            return fn(nd)
+    return _REPL(nd)
+
+
+def lora_spec(path: str, leaf, *, client_axis: Optional[Tuple[str, ...]] = None) -> P:
+    """LoRA a: (…, d_in, r) shard d_in like the base input; b: (…, r, d_out)
+    shard d_out like the base output. With ``client_axis`` a leading
+    client-group dim is prepended (local LoRA)."""
+    nd = leaf.ndim
+    lead = [client_axis] if client_axis else []
+    offset = 1 if client_axis else 0
+    body = [None] * (nd - offset)
+
+    is_a = path.endswith("/a")
+    # which matrix does this lora belong to?
+    out_sharded = bool(re.search(r"/(w[qkv]|cw[qkv]|w_gate|w_up|w_in|in_proj|s_gate|s_up)/", path))
+    in_sharded = bool(re.search(r"/(wo|cwo|w_down|w_out|out_proj|s_down)/", path))
+    if is_a and in_sharded and nd - offset >= 2:
+        body[-2] = "model"  # a: (..., d_in, r) with d_in sharded
+    if (not is_a) and out_sharded and nd - offset >= 1:
+        body[-1] = "model"  # b: (..., r, d_out) with d_out sharded
+    return P(*(lead + body))
+
+
+def batch_spec(path: str, leaf, dp: Tuple[str, ...], dp_size: int = 1) -> P:
+    nd = leaf.ndim
+    if dp_size > 1 and leaf.shape[0] % dp_size:
+        return P(*([None] * nd))  # e.g. long_500k's global_batch=1: replicate
+    return P(*([dp] + [None] * (nd - 1)))
+
+
+def cache_spec(path: str, leaf, dp: Tuple[str, ...], cfg: ModelConfig,
+               dp_size: int = 1) -> P:
+    """KV/SSM caches: (L, B, T, KVH, hd) etc — batch on dp, heads on model
+    when divisible, else the time axis on model (memory > latency for
+    decode; see EXPERIMENTS.md §Perf)."""
+    nd = leaf.ndim
+    spec = [None] * nd
+    if nd >= 2 and (dp_size <= 1 or leaf.shape[1] % dp_size == 0):
+        spec[1] = dp  # batch axis
+    if re.search(r"(attn_k|attn_v|^k$|^v$|/k$|/v$|cross_k|cross_v)", path) and nd == 5:
+        kvh = leaf.shape[3]
+        if kvh % 16 == 0:
+            spec[3] = "model"
+        else:
+            spec[2] = "model"  # shard cache length instead
+    elif re.search(r"conv$|conv", path) and nd == 4:
+        spec[3] = "model"  # conv channels
+    elif re.search(r"state", path) and nd == 5:
+        spec[2] = "model"  # SSM heads
+    return P(*spec)
+
+
+# ---------------------------------------------------------------------------
+# tree builders
+# ---------------------------------------------------------------------------
+
+
+def shardings_for(mesh, tree, spec_fn) -> Any:
+    def mk(path, leaf):
+        spec = spec_fn(path, leaf)
+        return NamedSharding(mesh, _fit(_restrict(spec, mesh), leaf, mesh))
+    return tree_map_with_path_str(mk, tree)
+
+
+def _fit(spec: P, leaf, mesh) -> P:
+    """Drop per-dim axes whose size does not divide the dim (input shardings
+    require exact divisibility; e.g. mamba2's vocab 50280 on 16-way)."""
+    out = []
+    for dim, entry in enumerate(spec):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, (tuple, list)) else (entry,)
+        prod = 1
+        for a in axes:
+            prod *= mesh.shape[a]
+        if dim < leaf.ndim and leaf.shape[dim] % prod == 0:
+            out.append(entry)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def _restrict(spec: P, mesh) -> P:
+    """Drop axis names that don't exist in this mesh (e.g. 'pod' single-pod)."""
+    names = set(mesh.axis_names)
+
+    def ok(entry):
+        if entry is None:
+            return None
+        if isinstance(entry, (tuple, list)):
+            kept = tuple(a for a in entry if a in names)
+            return kept if kept else None
+        return entry if entry in names else None
+
+    return P(*[ok(e) for e in spec])
+
+
+def base_param_shardings(mesh, params, *, moe_token_parallel: bool = False):
+    ms = mesh.shape.get("model", 1)
+    return shardings_for(
+        mesh, params,
+        lambda p, l: base_param_spec(p, l, ms, moe_token_parallel),
+    )
+
+
+def lora_shardings(mesh, lora, *, client_axes=None):
+    return shardings_for(
+        mesh, lora, lambda p, l: lora_spec(p, l, client_axis=client_axes)
+    )
+
+
+def batch_shardings(mesh, batch, dp):
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    return shardings_for(mesh, batch, lambda p, l: batch_spec(p, l, dp, dp_size))
+
+
+def cache_shardings(mesh, cache, dp, cfg):
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    return shardings_for(mesh, cache, lambda p, l: cache_spec(p, l, dp, cfg, dp_size))
+
+
+def replicated(mesh, tree):
+    return shardings_for(mesh, tree, lambda p, l: P())

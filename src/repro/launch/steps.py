@@ -1,0 +1,146 @@
+"""Distributed step builders: FibecFed train step, prefill, decode.
+
+The train step realizes Alg. 1's tuning phase as one SPMD program:
+
+- ``state["gal_lora"]`` — replicated over client axes; its gradient mean over
+  clients lowers to the ONLY cross-client all-reduce in the program (= the
+  paper's server aggregation of GAL layers).
+- ``state["local_lora"]`` — leading client-group axis sharded over
+  ("pod","data"); its gradients stay client-local by construction.
+- ``state["gal_mask"]`` / ``state["local_mask"]`` — FibecFed's layer and
+  neuron masks, applied inside the optimizer update.
+
+The batch (B_global, …) is reshaped to (n_groups, B/n_groups, …) and vmapped:
+each client group trains on its own shard with its own local LoRA — non-IID
+FL semantics in a single jit.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.model_api import ModelFns
+from repro.optim import adamw_update
+from repro.train.losses import make_loss_fn
+
+
+def make_train_state(model: ModelFns, rng, n_groups: int):
+    """Materialize (or eval_shape) the FibecFed distributed train state."""
+    gal_lora = model.init_lora(rng)
+    local_lora = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (n_groups, *x.shape)).copy(), gal_lora
+    )
+    zeros = lambda t: jax.tree.map(jnp.zeros_like, t)
+    ones = lambda t: jax.tree.map(lambda x: jnp.ones_like(x, jnp.float32), t)
+    return {
+        "gal_lora": gal_lora,
+        "local_lora": local_lora,
+        "gal_m": zeros(gal_lora),
+        "gal_v": zeros(gal_lora),
+        "local_m": zeros(local_lora),
+        "local_v": zeros(local_lora),
+        "gal_mask": ones(gal_lora),  # 0/1 per Alg.1 init phase; ones = all-GAL
+        "local_mask": zeros(local_lora),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def _merge_lora(gal, local_c, mask):
+    return jax.tree.map(lambda g, l, m: (m * g + (1.0 - m) * l).astype(g.dtype), gal, local_c, mask)
+
+
+def _adamw(params, grads, m, v, t, mask, lr):
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    mask = jax.tree.map(lambda mm: mm.astype(jnp.float32), mask)
+    grads = jax.tree.map(lambda g, mm: g * mm, grads, mask)
+    m = jax.tree.map(lambda a, g: b1 * a + (1 - b1) * g, m, grads)
+    v = jax.tree.map(lambda a, g: b2 * a + (1 - b2) * g * g, v, grads)
+    tf = t.astype(jnp.float32) + 1.0
+    c1 = 1.0 / (1.0 - b1**tf)
+    c2 = 1.0 / (1.0 - b2**tf)
+    new_params = jax.tree.map(
+        lambda p, mm_, vv, mk: p - mk * lr * (mm_ * c1) / (jnp.sqrt(vv * c2) + eps),
+        params, m, v, mask,
+    )
+    return new_params, m, v
+
+
+def build_train_step(
+    model: ModelFns,
+    n_groups: int,
+    *,
+    learning_rate: float = 1e-4,
+) -> Callable:
+    """Returns train_step(params, state, batch) -> (state, metrics)."""
+    loss_fn = make_loss_fn(model)
+
+    def train_step(params, state, batch):
+        # split the global batch into client groups
+        def split(x):
+            return x.reshape(n_groups, x.shape[0] // n_groups, *x.shape[1:])
+
+        batch_g = jax.tree.map(split, batch)
+
+        def client_loss(gal_lora, local_c, batch_c):
+            lora_c = _merge_lora(gal_lora, local_c, state["gal_mask"])
+            return loss_fn(params, lora_c, batch_c)
+
+        def mean_loss(gal_lora, local_lora):
+            losses = jax.vmap(client_loss, in_axes=(None, 0, 0))(
+                gal_lora, local_lora, batch_g
+            )
+            return jnp.mean(losses)
+
+        loss, (g_gal, g_local) = jax.value_and_grad(mean_loss, argnums=(0, 1))(
+            state["gal_lora"], state["local_lora"]
+        )
+
+        inv_gal = jax.tree.map(lambda m: 1.0 - m, state["gal_mask"])
+        local_mask = jax.tree.map(
+            lambda inv, nm: inv[None] * nm if nm.ndim == inv.ndim + 1 else inv * nm,
+            inv_gal,
+            state["local_mask"],
+        )
+        new_gal, gal_m, gal_v = _adamw(
+            state["gal_lora"], g_gal, state["gal_m"], state["gal_v"],
+            state["step"], state["gal_mask"], learning_rate,
+        )
+        new_local, local_m, local_v = _adamw(
+            state["local_lora"], g_local, state["local_m"], state["local_v"],
+            state["step"], local_mask, learning_rate,
+        )
+        new_state = {
+            "gal_lora": new_gal,
+            "local_lora": new_local,
+            "gal_m": gal_m,
+            "gal_v": gal_v,
+            "local_m": local_m,
+            "local_v": local_v,
+            "gal_mask": state["gal_mask"],
+            "local_mask": state["local_mask"],
+            "step": state["step"] + 1,
+        }
+        metrics = {"loss": loss}
+        return new_state, metrics
+
+    return train_step
+
+
+def build_prefill_step(model: ModelFns, cache_len: int) -> Callable:
+    def prefill_step(params, lora, batch):
+        logits, cache, pos = model.prefill(params, lora, batch, cache_len)
+        return logits, cache
+
+    return prefill_step
+
+
+def build_decode_step(model: ModelFns) -> Callable:
+    def decode_step(params, lora, token, cache, position):
+        logits, new_cache = model.decode_step(params, lora, token, cache, position)
+        return logits, new_cache
+
+    return decode_step

@@ -1,0 +1,9 @@
+from repro.lora.lora import (
+    init_lora,
+    lora_num_logical_layers,
+    lora_layer_index_tree,
+    gal_mask_tree,
+    neuron_mask_tree,
+    zeros_like_lora,
+    lora_param_count,
+)

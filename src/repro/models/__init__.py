@@ -1,0 +1,1 @@
+from repro.models.model_api import build_model, ModelFns

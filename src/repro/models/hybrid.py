@@ -1,0 +1,328 @@
+"""Zamba2-style hybrid: stacked Mamba2 layers + one SHARED attention block.
+
+[arXiv:2411.15242] — the shared transformer block (attention + SwiGLU MLP,
+one parameter set) is applied after every ``hybrid_period`` Mamba2 layers.
+Parameter sharing is what makes the 81-layer model small; for FibecFed the
+shared block counts as a single "layer" for GAL selection (DESIGN.md §4).
+
+Structure: ``n_apps = num_layers // hybrid_period`` super-blocks of
+(period Mamba layers → shared attention), then the remainder Mamba layers.
+Each application point keeps its own KV cache even though weights are shared.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import attention as attn
+from repro.models.layers import apply_rope, init_embed, init_stacked_dense, linear, rms_norm
+from repro.models.mlp import apply_mlp, init_mlp
+from repro.models.ssm import (
+    init_ssm_layers,
+    mamba2_block,
+    mamba2_decode,
+    mamba2_prefill,
+    ssm_dims,
+)
+
+
+def _split_counts(cfg: ModelConfig) -> Tuple[int, int, int]:
+    period = cfg.hybrid_period
+    n_apps = cfg.num_layers // period
+    remainder = cfg.num_layers - n_apps * period
+    return n_apps, period, remainder
+
+
+def init_hybrid(rng, cfg: ModelConfig) -> Dict[str, Any]:
+    dtype = jnp.dtype(cfg.dtype)
+    r = jax.random.split(rng, 8)
+    hd = cfg.resolved_head_dim
+    H, KVH, D = cfg.num_heads, cfg.num_kv_heads, cfg.d_model
+    shared = {
+        "wq": init_stacked_dense(r[0], 1, D, H * hd, dtype)[0],
+        "wk": init_stacked_dense(r[1], 1, D, KVH * hd, dtype)[0],
+        "wv": init_stacked_dense(r[2], 1, D, KVH * hd, dtype)[0],
+        "wo": init_stacked_dense(r[3], 1, H * hd, D, dtype)[0],
+        "attn_norm_w": jnp.ones((D,), dtype),
+        "mlp_norm_w": jnp.ones((D,), dtype),
+    }
+    mlp = init_mlp(r[4], 1, D, cfg.d_ff, "swiglu", dtype)
+    shared.update({k: v[0] for k, v in mlp.items()})
+    return {
+        "embed": init_embed(r[5], cfg.vocab_size, D, dtype),
+        "mamba": {
+            **init_ssm_layers(r[6], cfg.num_layers, cfg, dtype),
+            "norm_w": jnp.ones((cfg.num_layers, D), dtype),
+        },
+        "shared": shared,
+        "final_norm_w": jnp.ones((D,), dtype),
+        "lm_head": init_stacked_dense(r[7], 1, D, cfg.vocab_size, dtype)[0],
+    }
+
+
+def _shared_attn_block(
+    h, p, lora, cfg: ModelConfig, positions, lora_scale,
+    cache=None, cache_position=None,
+):
+    """Shared attention + MLP block. cache: (k, v) or None."""
+    B, S = h.shape[0], h.shape[1]
+    hd = cfg.resolved_head_dim
+    lget = (lambda k: lora.get(k) if lora else None)
+    x = rms_norm(h, p["attn_norm_w"])
+    q = linear(x, {"w": p["wq"]}, lget("wq"), lora_scale).reshape(B, S, cfg.num_heads, hd)
+    k = linear(x, {"w": p["wk"]}, lget("wk"), lora_scale).reshape(B, S, cfg.num_kv_heads, hd)
+    v = linear(x, {"w": p["wv"]}, lget("wv"), lora_scale).reshape(B, S, cfg.num_kv_heads, hd)
+    q = apply_rope(q, positions, theta=cfg.rope_theta, mode="full")
+    k = apply_rope(k, positions, theta=cfg.rope_theta, mode="full")
+    new_cache = None
+    if cache is not None:
+        k_c, v_c = cache
+        k_c = jax.lax.dynamic_update_slice_in_dim(k_c, k.astype(k_c.dtype), cache_position, axis=1)
+        v_c = jax.lax.dynamic_update_slice_in_dim(v_c, v.astype(v_c.dtype), cache_position, axis=1)
+        o = attn.decode_attention(q, k_c, v_c, cache_position)
+        new_cache = (k_c, v_c)
+        kv_for_cache = None
+    else:
+        o = attn.blockwise_attention(q, k, v, causal=True)
+        kv_for_cache = (k, v)
+    h = h + linear(o.reshape(B, S, cfg.num_heads * hd), {"w": p["wo"]}, lget("wo"), lora_scale)
+    x2 = rms_norm(h, p["mlp_norm_w"])
+    h = h + apply_mlp(x2, p, "swiglu", lora, lora_scale)
+    return h, new_cache, kv_for_cache
+
+
+def _mamba_slice(tree, start, count):
+    return jax.tree.map(lambda x: x[start : start + count], tree)
+
+
+def hybrid_forward(
+    params, lora, tokens, cfg: ModelConfig, *, lora_scale=None,
+    embed_noise=None, collect_layer_norms=False,
+):
+    """Training forward. lora = {"mamba": stacked(L), "shared": unstacked}.
+
+    With ``collect_layer_norms``: returns per-layer norms for the L mamba
+    layers followed by ONE entry for the shared attention block (its last
+    application) — matching ``lora_num_logical_layers`` = L + 1.
+    """
+    lora_scale = lora_scale if lora_scale is not None else cfg.lora_alpha / cfg.lora_rank
+    n_apps, period, remainder = _split_counts(cfg)
+    h = jnp.take(params["embed"], tokens, axis=0)
+    if embed_noise is not None:
+        h = h + embed_noise.astype(h.dtype)
+    S = h.shape[1]
+    positions = jnp.arange(S)[None, :]
+
+    m_params = params["mamba"]
+    m_lora = lora["mamba"]
+
+    def _hnorm(h):
+        return jnp.sqrt(jnp.sum(jnp.square(h.astype(jnp.float32)), axis=(1, 2)))
+
+    def mamba_layer(h, p_slice, l_slice):
+        x = rms_norm(h, p_slice["norm_w"])
+        return h + mamba2_block(x, p_slice, cfg, l_slice, lora_scale)
+
+    shared_norm = None
+
+    def super_block(h, xs):
+        p_stack, l_stack = xs  # stacked over `period`
+
+        def inner(h, xs2):
+            p, l = xs2
+            h = mamba_layer(h, p, l)
+            return h, (_hnorm(h) if collect_layer_norms else None)
+
+        h, m_norms = jax.lax.scan(inner, h, (p_stack, l_stack))
+        h, _, _ = _shared_attn_block(
+            h, params["shared"], lora["shared"], cfg, positions, lora_scale
+        )
+        return h, (m_norms, _hnorm(h)) if collect_layer_norms else None
+
+    mamba_norms = []
+    if n_apps:
+        main_p = jax.tree.map(
+            lambda x: x[: n_apps * period].reshape(n_apps, period, *x.shape[1:]), m_params
+        )
+        main_l = jax.tree.map(
+            lambda x: x[: n_apps * period].reshape(n_apps, period, *x.shape[1:]), m_lora
+        )
+        h, ys = jax.lax.scan(super_block, h, (main_p, main_l))
+        if collect_layer_norms:
+            m_norms, s_norms = ys
+            mamba_norms.append(m_norms.reshape(n_apps * period, -1))
+            shared_norm = s_norms[-1]
+    if remainder:
+        rem_p = _mamba_slice(m_params, n_apps * period, remainder)
+        rem_l = _mamba_slice(m_lora, n_apps * period, remainder)
+
+        def inner(h, xs2):
+            p, l = xs2
+            h = mamba_layer(h, p, l)
+            return h, (_hnorm(h) if collect_layer_norms else None)
+
+        h, r_norms = jax.lax.scan(inner, h, (rem_p, rem_l))
+        if collect_layer_norms:
+            mamba_norms.append(r_norms)
+
+    h = rms_norm(h, params["final_norm_w"])
+    logits = jnp.einsum("bsd,dv->bsv", h, params["lm_head"].astype(h.dtype))
+    if collect_layer_norms:
+        if shared_norm is None:  # no shared application (tiny configs)
+            shared_norm = _hnorm(h)
+        norms = jnp.concatenate(mamba_norms + [shared_norm[None]], axis=0)
+        return logits, jnp.zeros((), jnp.float32), norms
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def init_hybrid_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    n_apps, _, _ = _split_counts(cfg)
+    hd = cfg.resolved_head_dim
+    dims = ssm_dims(cfg)
+    L = cfg.num_layers
+    return {
+        "attn_k": jnp.zeros((n_apps, batch, max_len, cfg.num_kv_heads, hd), dtype),
+        "attn_v": jnp.zeros((n_apps, batch, max_len, cfg.num_kv_heads, hd), dtype),
+        "conv": jnp.zeros((L, batch, cfg.ssm.conv_width - 1, dims["conv_ch"]), dtype),
+        "state": jnp.zeros(
+            (L, batch, dims["nheads"], cfg.ssm.head_dim, cfg.ssm.d_state), jnp.float32
+        ),
+    }
+
+
+def hybrid_prefill(params, lora, tokens, cfg: ModelConfig, cache_len: int, *, lora_scale=None):
+    lora_scale = lora_scale if lora_scale is not None else cfg.lora_alpha / cfg.lora_rank
+    n_apps, period, remainder = _split_counts(cfg)
+    h = jnp.take(params["embed"], tokens, axis=0)
+    B, S = tokens.shape
+    positions = jnp.arange(S)[None, :]
+    m_params, m_lora = params["mamba"], lora["mamba"]
+
+    def mamba_layer_cache(h, p_slice, l_slice):
+        x = rms_norm(h, p_slice["norm_w"])
+        out, (conv_tail, state) = mamba2_prefill(x, p_slice, cfg, l_slice, lora_scale)
+        return h + out, conv_tail, state
+
+    def super_block(h, xs):
+        p_stack, l_stack = xs
+
+        def inner(h, xs2):
+            p, l = xs2
+            h, conv_tail, state = mamba_layer_cache(h, p, l)
+            return h, (conv_tail, state)
+
+        h, (conv_tails, states) = jax.lax.scan(inner, h, (p_stack, l_stack))
+        h, _, kv = _shared_attn_block(
+            h, params["shared"], lora["shared"], cfg, positions, lora_scale
+        )
+        k, v = kv
+        keep = min(cache_len, S)
+        k_keep, v_keep = k[:, S - keep :], v[:, S - keep :]
+        if keep < cache_len:
+            pad = cache_len - keep
+            k_keep = jnp.pad(k_keep, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            v_keep = jnp.pad(v_keep, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        return h, (conv_tails, states, k_keep, v_keep)
+
+    caches = {}
+    if n_apps:
+        main_p = jax.tree.map(
+            lambda x: x[: n_apps * period].reshape(n_apps, period, *x.shape[1:]), m_params
+        )
+        main_l = jax.tree.map(
+            lambda x: x[: n_apps * period].reshape(n_apps, period, *x.shape[1:]), m_lora
+        )
+        h, (conv_m, state_m, k_c, v_c) = jax.lax.scan(super_block, h, (main_p, main_l))
+        caches["attn_k"], caches["attn_v"] = k_c, v_c
+        conv_main = conv_m.reshape(n_apps * period, *conv_m.shape[2:])
+        state_main = state_m.reshape(n_apps * period, *state_m.shape[2:])
+    if remainder:
+        rem_p = _mamba_slice(m_params, n_apps * period, remainder)
+        rem_l = _mamba_slice(m_lora, n_apps * period, remainder)
+
+        def inner(h, xs2):
+            p, l = xs2
+            h, conv_tail, state = mamba_layer_cache(h, p, l)
+            return h, (conv_tail, state)
+
+        h, (conv_r, state_r) = jax.lax.scan(inner, h, (rem_p, rem_l))
+        conv_main = jnp.concatenate([conv_main, conv_r], axis=0) if n_apps else conv_r
+        state_main = jnp.concatenate([state_main, state_r], axis=0) if n_apps else state_r
+
+    caches["conv"] = conv_main.astype(jnp.dtype(cfg.dtype))
+    caches["state"] = state_main
+    h = rms_norm(h[:, -1:], params["final_norm_w"])
+    logits = jnp.einsum("bsd,dv->bsv", h, params["lm_head"].astype(h.dtype))
+    return logits, caches, jnp.array(S, jnp.int32)
+
+
+def hybrid_decode_step(
+    params, lora, token, cfg: ModelConfig, cache, position, *, lora_scale=None
+):
+    lora_scale = lora_scale if lora_scale is not None else cfg.lora_alpha / cfg.lora_rank
+    n_apps, period, remainder = _split_counts(cfg)
+    h = jnp.take(params["embed"], token, axis=0)
+    positions = jnp.reshape(position, (1, 1))
+    m_params, m_lora = params["mamba"], lora["mamba"]
+
+    def mamba_layer_step(h, p_slice, l_slice, conv_buf, state):
+        x = rms_norm(h, p_slice["norm_w"])
+        out, (new_conv, new_state) = mamba2_decode(
+            x, p_slice, cfg, (conv_buf, state), l_slice, lora_scale
+        )
+        return h + out, new_conv, new_state
+
+    def super_block(h, xs):
+        p_stack, l_stack, conv_stack, state_stack, k_c, v_c = xs
+
+        def inner(h, xs2):
+            p, l, cb, st = xs2
+            h, ncb, nst = mamba_layer_step(h, p, l, cb, st)
+            return h, (ncb, nst)
+
+        h, (new_conv, new_state) = jax.lax.scan(
+            inner, h, (p_stack, l_stack, conv_stack, state_stack)
+        )
+        h, new_attn_cache, _ = _shared_attn_block(
+            h, params["shared"], lora["shared"], cfg, positions, lora_scale,
+            cache=(k_c, v_c), cache_position=position,
+        )
+        return h, (new_conv, new_state, *new_attn_cache)
+
+    new_cache = dict(cache)
+    if n_apps:
+        reshape = lambda x: x[: n_apps * period].reshape(n_apps, period, *x.shape[1:])
+        main_p = jax.tree.map(reshape, m_params)
+        main_l = jax.tree.map(reshape, m_lora)
+        conv_main = reshape(cache["conv"])
+        state_main = reshape(cache["state"])
+        h, (nc, ns, nk, nv) = jax.lax.scan(
+            super_block, h, (main_p, main_l, conv_main, state_main,
+                             cache["attn_k"], cache["attn_v"])
+        )
+        new_cache["attn_k"], new_cache["attn_v"] = nk, nv
+        nc = nc.reshape(n_apps * period, *nc.shape[2:])
+        ns = ns.reshape(n_apps * period, *ns.shape[2:])
+    if remainder:
+        rem_p = _mamba_slice(m_params, n_apps * period, remainder)
+        rem_l = _mamba_slice(m_lora, n_apps * period, remainder)
+        conv_r = cache["conv"][n_apps * period :]
+        state_r = cache["state"][n_apps * period :]
+
+        def inner(h, xs2):
+            p, l, cb, st = xs2
+            h, ncb, nst = mamba_layer_step(h, p, l, cb, st)
+            return h, (ncb, nst)
+
+        h, (ncr, nsr) = jax.lax.scan(inner, h, (rem_p, rem_l, conv_r, state_r))
+        nc = jnp.concatenate([nc, ncr], axis=0) if n_apps else ncr
+        ns = jnp.concatenate([ns, nsr], axis=0) if n_apps else nsr
+    new_cache["conv"], new_cache["state"] = nc, ns
+
+    h = rms_norm(h, params["final_norm_w"])
+    logits = jnp.einsum("bsd,dv->bsv", h, params["lm_head"].astype(h.dtype))
+    return logits, new_cache

@@ -1,0 +1,141 @@
+"""Shared building blocks: initializers, norms, embeddings, RoPE, linears.
+
+All modules are plain functions over explicit pytrees. A "linear" is a dict
+``{"w": (in, out)[, "b": (out,)]}``; stacked (scanned) layers carry a leading
+layer axis on every leaf. LoRA deltas are applied by :func:`linear` when a
+``lora`` dict ``{"a": (in, r), "b": (r, out)}`` is provided (optionally
+masked/scaled by the caller).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def init_dense(rng, d_in: int, d_out: int, dtype, scale: Optional[float] = None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(rng, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def init_stacked_dense(rng, n: int, d_in: int, d_out: int, dtype, scale=None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(rng, (n, d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def init_embed(rng, vocab: int, d: int, dtype):
+    return (jax.random.normal(rng, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Linear with optional LoRA delta
+# ---------------------------------------------------------------------------
+
+
+def linear(x: jax.Array, p, lora=None, lora_scale: float = 1.0) -> jax.Array:
+    """``x @ w (+ b)`` with an optional LoRA low-rank delta.
+
+    x: (..., d_in). p: {"w": (d_in, d_out)[, "b"]}.
+    lora: {"a": (d_in, r), "b": (r, d_out)} or None.
+    """
+    y = jnp.einsum("...i,io->...o", x, p["w"])
+    if lora is not None:
+        z = jnp.einsum("...i,ir->...r", x, lora["a"].astype(x.dtype))
+        y = y + lora_scale * jnp.einsum("...r,ro->...o", z, lora["b"].astype(x.dtype))
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Norms (computed in f32, cast back)
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, w: jax.Array, b: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def apply_norm(x, params, prefix: str, kind: str):
+    """Dispatch on cfg.norm; params carry `{prefix}_w` (+ `_b` for layernorm)."""
+    if kind == "layernorm":
+        return layer_norm(x, params[f"{prefix}_w"], params[f"{prefix}_b"])
+    return rms_norm(x, params[f"{prefix}_w"])
+
+
+def init_norm(n_layers: Optional[int], d: int, kind: str, dtype):
+    shape = (d,) if n_layers is None else (n_layers, d)
+    out = {"w": jnp.ones(shape, dtype)}
+    if kind == "layernorm":
+        out["b"] = jnp.zeros(shape, dtype)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, rotary_dims: int, theta: float) -> jax.Array:
+    """Inverse frequencies for the rotated sub-dimension. (rotary_dims//2,)"""
+    exponent = jnp.arange(0, rotary_dims, 2, dtype=jnp.float32) / rotary_dims
+    return 1.0 / (theta**exponent)
+
+
+def apply_rope(
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    theta: float = 10000.0,
+    mode: str = "full",
+) -> jax.Array:
+    """Apply rotary embedding.
+
+    x: (..., seq, heads, head_dim); positions: broadcastable to (..., seq).
+    mode "full": rotate the whole head_dim. mode "2d" (ChatGLM): rotate only
+    the first half of head_dim, pass the second half through. mode "none":
+    identity.
+    """
+    if mode == "none":
+        return x
+    head_dim = x.shape[-1]
+    rotary_dims = head_dim if mode == "full" else head_dim // 2
+    inv_freq = rope_frequencies(head_dim, rotary_dims, theta)
+    angles = positions[..., None].astype(jnp.float32) * inv_freq  # (..., S, rd/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, rd/2)
+    sin = jnp.sin(angles)[..., None, :]
+
+    xr = x[..., :rotary_dims].astype(jnp.float32)
+    x1, x2 = jnp.split(xr, 2, axis=-1)
+    rotated = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    if rotary_dims == head_dim:
+        return rotated.astype(x.dtype)
+    return jnp.concatenate([rotated.astype(x.dtype), x[..., rotary_dims:]], axis=-1)
+
+
+def sinusoidal_positions(seq_len: int, d: int, dtype=jnp.float32) -> jax.Array:
+    """Whisper-style sinusoidal positional embedding table. (seq_len, d)"""
+    pos = jnp.arange(seq_len, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    freq = jnp.exp(-math.log(10000.0) * dim / max(d // 2 - 1, 1))
+    angles = pos * freq
+    return jnp.concatenate([jnp.sin(angles), jnp.cos(angles)], axis=-1).astype(dtype)
+
+
+def soft_cap(logits: jax.Array, cap: Optional[float]) -> jax.Array:
+    if cap is None:
+        return logits
+    return cap * jnp.tanh(logits / cap)

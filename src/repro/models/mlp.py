@@ -1,0 +1,34 @@
+"""Feed-forward blocks: SwiGLU and GELU, with LoRA-aware projections."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import init_stacked_dense, linear
+
+
+def init_mlp(rng, n_layers: int, d_model: int, d_ff: int, kind: str, dtype):
+    r = jax.random.split(rng, 3)
+    if kind == "swiglu":
+        return {
+            "w_gate": init_stacked_dense(r[0], n_layers, d_model, d_ff, dtype),
+            "w_up": init_stacked_dense(r[1], n_layers, d_model, d_ff, dtype),
+            "w_down": init_stacked_dense(r[2], n_layers, d_ff, d_model, dtype),
+        }
+    return {
+        "w_in": init_stacked_dense(r[0], n_layers, d_model, d_ff, dtype),
+        "w_out": init_stacked_dense(r[1], n_layers, d_ff, d_model, dtype),
+    }
+
+
+def apply_mlp(x: jax.Array, p, kind: str, lora=None, lora_scale: float = 1.0):
+    """p holds the *per-layer slice* (no layer axis). lora likewise."""
+    lget = (lambda k: lora.get(k) if lora else None)
+    if kind == "swiglu":
+        g = linear(x, {"w": p["w_gate"]}, lget("w_gate"), lora_scale)
+        u = linear(x, {"w": p["w_up"]}, lget("w_up"), lora_scale)
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+        return linear(h, {"w": p["w_down"]}, lget("w_down"), lora_scale)
+    h = linear(x, {"w": p["w_in"]}, lget("w_in"), lora_scale)
+    h = jax.nn.gelu(h.astype(jnp.float32), approximate=True).astype(x.dtype)
+    return linear(h, {"w": p["w_out"]}, lget("w_out"), lora_scale)

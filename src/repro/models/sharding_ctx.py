@@ -1,0 +1,46 @@
+"""Context for model-internal sharding constraints (perf-iteration knobs).
+
+Model code can't name mesh axes directly (single-pod has no "pod" axis, tests
+run on 1 device), so the launcher publishes the active data-parallel axes
+here and models express constraints symbolically:
+
+    constrain(h, ("dp", "model", None))   # sequence-parallel activations
+
+Outside a mesh context (CPU tests) this is a no-op.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_DP_AXES: Tuple[str, ...] = ("data",)
+_ENABLED: bool = False
+
+
+def set_mesh_axes(dp_axes: Sequence[str], enabled: bool = True) -> None:
+    global _DP_AXES, _ENABLED
+    _DP_AXES = tuple(dp_axes)
+    _ENABLED = enabled
+
+
+def disable() -> None:
+    global _ENABLED
+    _ENABLED = False
+
+
+def constrain(x: jax.Array, symbolic_spec: Sequence) -> jax.Array:
+    """Apply with_sharding_constraint; "dp" expands to the client axes."""
+    if not _ENABLED:
+        return x
+    entries = []
+    for e in symbolic_spec:
+        if e == "dp":
+            entries.append(_DP_AXES)
+        else:
+            entries.append(e)
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*entries))
+    except Exception:
+        return x  # no mesh context (unit tests)

@@ -1,0 +1,262 @@
+"""Mamba2 (SSD — state-space duality) blocks. [arXiv:2405.21060]
+
+Train/prefill uses the chunked SSD algorithm: quadratic attention-like
+computation *within* chunks of length Q plus a linear recurrence over chunk
+states — O(S·Q) work and O(S·N·P/Q) state memory. Decode is the pure
+recurrence with a constant-size state (B, nh, hd, N), which is what makes
+``long_500k`` trivial for SSM/hybrid architectures.
+
+A Pallas TPU kernel for the intra-chunk part lives in
+``repro.kernels.ssd_chunk`` (validated against ``repro.kernels.ref``); this
+module is the jnp path used by the step functions.
+
+Layout: heads ``nh = expand*d_model / head_dim`` carry the `model` sharding;
+B/C projections are shared across heads (single group, as in the paper).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, SSMConfig
+from repro.models.layers import init_stacked_dense, linear, rms_norm
+
+NEG_INF = -1e30
+
+
+def ssm_dims(cfg: ModelConfig) -> Dict[str, int]:
+    s = cfg.ssm
+    d_inner = s.d_inner(cfg.d_model)
+    nheads = s.num_heads(cfg.d_model)
+    conv_ch = d_inner + 2 * s.d_state
+    in_dim = 2 * d_inner + 2 * s.d_state + nheads  # z, x, B, C, dt
+    return dict(d_inner=d_inner, nheads=nheads, conv_ch=conv_ch, in_dim=in_dim)
+
+
+def init_ssm_layers(rng, n_layers: int, cfg: ModelConfig, dtype):
+    s = cfg.ssm
+    dims = ssm_dims(cfg)
+    r = jax.random.split(rng, 4)
+    dt = jnp.exp(
+        jax.random.uniform(r[2], (n_layers, dims["nheads"]), jnp.float32)
+        * (math.log(0.1) - math.log(1e-3))
+        + math.log(1e-3)
+    )
+    return {
+        "in_proj": init_stacked_dense(r[0], n_layers, cfg.d_model, dims["in_dim"], dtype),
+        "conv_w": (
+            jax.random.normal(r[1], (n_layers, s.conv_width, dims["conv_ch"]), jnp.float32)
+            / math.sqrt(s.conv_width)
+        ).astype(dtype),
+        "A_log": jnp.log(
+            jnp.tile(jnp.linspace(1.0, 16.0, dims["nheads"])[None], (n_layers, 1))
+        ).astype(jnp.float32),
+        "D": jnp.ones((n_layers, dims["nheads"]), jnp.float32),
+        "dt_bias": (dt + jnp.log(-jnp.expm1(-dt))).astype(jnp.float32),
+        "gate_norm_w": jnp.ones((n_layers, dims["d_inner"]), dtype),
+        "out_proj": init_stacked_dense(r[3], n_layers, dims["d_inner"], cfg.d_model, dtype),
+    }
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x: (B, S, C); w: (W, C)."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(W):
+        out = out + xp[:, i : i + x.shape[1]] * w[i].astype(x.dtype)
+    return out
+
+
+def segsum_decay(a: jax.Array) -> jax.Array:
+    """a: (..., Q) log-decays -> L: (..., Q, Q) with L[i,j]=exp(sum_{j<k<=i} a)."""
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]  # (...,Q,Q) = cs_i - cs_j
+    Q = a.shape[-1]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.exp(jnp.where(mask, diff, NEG_INF))
+
+
+def ssd_chunked(
+    x: jax.Array,  # (B, S, nh, hd) — already includes dt factor
+    a: jax.Array,  # (B, S, nh) log decay per step (A * dt, negative)
+    b: jax.Array,  # (B, S, N)
+    c: jax.Array,  # (B, S, N)
+    chunk: int,
+    initial_state=None,  # (B, nh, hd, N) or None
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD. Returns (y (B,S,nh,hd), final_state (B,nh,hd,N))."""
+    B, S, nh, hd = x.shape
+    N = b.shape[-1]
+    if S % chunk:
+        # zero-pad the tail: x=0 adds nothing to states, a=0 decays nothing,
+        # and padded outputs are sliced off below.
+        pad = chunk - S % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+        y, state = ssd_chunked(x, a, b, c, chunk, initial_state)
+        return y[:, :S], state
+    nc = S // chunk
+    xf = x.astype(jnp.float32).reshape(B, nc, chunk, nh, hd)
+    af = a.astype(jnp.float32).reshape(B, nc, chunk, nh)
+    bf = b.astype(jnp.float32).reshape(B, nc, chunk, N)
+    cf = c.astype(jnp.float32).reshape(B, nc, chunk, N)
+
+    # ---- intra-chunk (quadratic within chunk) ----
+    L = segsum_decay(jnp.moveaxis(af, -1, -2))  # (B,nc,nh,Q,Q)
+    scores = jnp.einsum("bkis,bkjs->bkij", cf, bf)  # (B,nc,Q,Q) shared heads
+    y_intra = jnp.einsum("bkhij,bkij,bkjhd->bkihd", L, scores, xf)
+
+    # ---- chunk states ----
+    cs = jnp.cumsum(af, axis=2)  # (B,nc,Q,nh)
+    total = cs[:, :, -1]  # (B,nc,nh)
+    decay_to_end = jnp.exp(total[:, :, None] - cs)  # (B,nc,Q,nh)
+    # S_c = sum_j decay_to_end_j * b_j ⊗ x_j : (B,nc,nh,hd,N)
+    states = jnp.einsum("bkjh,bkjs,bkjhd->bkhds", decay_to_end, bf, xf)
+
+    # ---- inter-chunk recurrence ----
+    chunk_decay = jnp.exp(total)  # (B,nc,nh)
+
+    def step(carry, inp):
+        st, dec = inp
+        new = carry * dec[..., None, None] + st
+        return new, carry  # emit the state *entering* the chunk
+
+    init = (
+        jnp.zeros((B, nh, hd, N), jnp.float32)
+        if initial_state is None
+        else initial_state.astype(jnp.float32)
+    )
+    final_state, prev_states = jax.lax.scan(
+        step,
+        init,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    prev_states = jnp.moveaxis(prev_states, 0, 1)  # (B,nc,nh,hd,N)
+
+    # ---- inter-chunk output: y_i += exp(cs_i) * c_i · state_prev ----
+    decay_in = jnp.exp(cs)  # (B,nc,Q,nh)
+    y_inter = jnp.einsum("bkih,bkis,bkhds->bkihd", decay_in, cf, prev_states)
+
+    y = (y_intra + y_inter).reshape(B, S, nh, hd)
+    return y, final_state
+
+
+def ssd_decode_step(
+    x: jax.Array,  # (B, nh, hd) — includes dt factor
+    a: jax.Array,  # (B, nh) log decay
+    b: jax.Array,  # (B, N)
+    c: jax.Array,  # (B, N)
+    state: jax.Array,  # (B, nh, hd, N) f32
+) -> Tuple[jax.Array, jax.Array]:
+    """One recurrent step. Returns (y (B,nh,hd), new_state)."""
+    xf, af = x.astype(jnp.float32), a.astype(jnp.float32)
+    bf, cf = b.astype(jnp.float32), c.astype(jnp.float32)
+    new_state = state * jnp.exp(af)[..., None, None] + jnp.einsum(
+        "bhd,bn->bhdn", xf, bf
+    )
+    y = jnp.einsum("bhdn,bn->bhd", new_state, cf)
+    return y, new_state
+
+
+def _split_in_proj(zxbcdt: jax.Array, cfg: ModelConfig):
+    dims = ssm_dims(cfg)
+    di, N = dims["d_inner"], cfg.ssm.d_state
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di : di + dims["conv_ch"]]
+    dt = zxbcdt[..., di + dims["conv_ch"] :]
+    return z, xbc, dt
+
+
+def mamba2_block(
+    h: jax.Array,  # (B, S, D) — already normed
+    p,  # per-layer param slice
+    cfg: ModelConfig,
+    lora=None,
+    lora_scale: float = 1.0,
+) -> jax.Array:
+    """Full Mamba2 mixer (train/prefill). Returns (B, S, D)."""
+    s = cfg.ssm
+    dims = ssm_dims(cfg)
+    di, nh, hd, N = dims["d_inner"], dims["nheads"], s.head_dim, s.d_state
+    B, S, _ = h.shape
+
+    lget = (lambda k: lora.get(k) if lora else None)
+    zxbcdt = linear(h, {"w": p["in_proj"]}, lget("in_proj"), lora_scale)
+    z, xbc, dt = _split_in_proj(zxbcdt, cfg)
+    xbc = jax.nn.silu(causal_conv1d(xbc, p["conv_w"]).astype(jnp.float32)).astype(h.dtype)
+    x, b, c = xbc[..., :di], xbc[..., di : di + N], xbc[..., di + N :]
+
+    dtf = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,nh)
+    A = -jnp.exp(p["A_log"])  # (nh,)
+    a_log_decay = A * dtf  # (B,S,nh)
+
+    xh = x.reshape(B, S, nh, hd)
+    y, _ = ssd_chunked(xh * dtf[..., None].astype(xh.dtype), a_log_decay, b, c, s.chunk_size)
+    y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, S, di).astype(h.dtype)
+
+    # gated RMSNorm then out-projection
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(h.dtype), p["gate_norm_w"])
+    return linear(y, {"w": p["out_proj"]}, lget("out_proj"), lora_scale)
+
+
+def mamba2_prefill(h, p, cfg, lora=None, lora_scale=1.0):
+    """Like mamba2_block but also returns (conv_tail, final_state) for caching."""
+    s = cfg.ssm
+    dims = ssm_dims(cfg)
+    di, nh, hd, N = dims["d_inner"], dims["nheads"], s.head_dim, s.d_state
+    B, S, _ = h.shape
+    lget = (lambda k: lora.get(k) if lora else None)
+    zxbcdt = linear(h, {"w": p["in_proj"]}, lget("in_proj"), lora_scale)
+    z, xbc_raw, dt = _split_in_proj(zxbcdt, cfg)
+    conv_tail = xbc_raw[:, -(s.conv_width - 1) :]  # (B, W-1, conv_ch)
+    xbc = jax.nn.silu(causal_conv1d(xbc_raw, p["conv_w"]).astype(jnp.float32)).astype(h.dtype)
+    x, b, c = xbc[..., :di], xbc[..., di : di + N], xbc[..., di + N :]
+    dtf = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    xh = x.reshape(B, S, nh, hd)
+    y, state = ssd_chunked(
+        xh * dtf[..., None].astype(xh.dtype), A * dtf, b, c, s.chunk_size
+    )
+    y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, S, di).astype(h.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(h.dtype), p["gate_norm_w"])
+    out = linear(y, {"w": p["out_proj"]}, lget("out_proj"), lora_scale)
+    return out, (conv_tail, state)
+
+
+def mamba2_decode(h, p, cfg, cache, lora=None, lora_scale=1.0):
+    """One-token step. h: (B, 1, D); cache: (conv_buf (B,W-1,conv_ch), state)."""
+    s = cfg.ssm
+    dims = ssm_dims(cfg)
+    di, nh, hd, N = dims["d_inner"], dims["nheads"], s.head_dim, s.d_state
+    B = h.shape[0]
+    conv_buf, state = cache
+    lget = (lambda k: lora.get(k) if lora else None)
+    zxbcdt = linear(h[:, 0], {"w": p["in_proj"]}, lget("in_proj"), lora_scale)
+    z, xbc_raw, dt = _split_in_proj(zxbcdt, cfg)
+
+    # causal conv over [buffer, current]
+    window = jnp.concatenate([conv_buf, xbc_raw[:, None]], axis=1)  # (B,W,ch)
+    conv_out = jnp.einsum("bwc,wc->bc", window, p["conv_w"].astype(window.dtype))
+    xbc = jax.nn.silu(conv_out.astype(jnp.float32)).astype(h.dtype)
+    new_conv_buf = window[:, 1:]
+
+    x, b, c = xbc[..., :di], xbc[..., di : di + N], xbc[..., di + N :]
+    dtf = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,nh)
+    A = -jnp.exp(p["A_log"])
+    xh = x.reshape(B, nh, hd)
+    y, new_state = ssd_decode_step(
+        xh * dtf[..., None].astype(xh.dtype), A * dtf, b, c, state
+    )
+    y = y + p["D"][None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, di).astype(h.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(h.dtype), p["gate_norm_w"])
+    out = linear(y, {"w": p["out_proj"]}, lget("out_proj"), lora_scale)
+    return out[:, None], (new_conv_buf, new_state)

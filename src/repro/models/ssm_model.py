@@ -1,0 +1,107 @@
+"""Mamba2 decoder-only language model (attention-free). [arXiv:2405.21060]"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.layers import init_embed, init_stacked_dense, rms_norm
+from repro.models.ssm import (
+    init_ssm_layers,
+    mamba2_block,
+    mamba2_decode,
+    mamba2_prefill,
+    ssm_dims,
+)
+
+
+def init_ssm_model(rng, cfg: ModelConfig) -> Dict[str, Any]:
+    dtype = jnp.dtype(cfg.dtype)
+    r = jax.random.split(rng, 3)
+    return {
+        "embed": init_embed(r[0], cfg.vocab_size, cfg.d_model, dtype),
+        "layers": {
+            **init_ssm_layers(r[1], cfg.num_layers, cfg, dtype),
+            "norm_w": jnp.ones((cfg.num_layers, cfg.d_model), dtype),
+        },
+        "final_norm_w": jnp.ones((cfg.d_model,), dtype),
+        "lm_head": init_stacked_dense(r[2], 1, cfg.d_model, cfg.vocab_size, dtype)[0],
+    }
+
+
+def ssm_forward(
+    params, lora, tokens, cfg: ModelConfig, *, lora_scale=None,
+    embed_noise=None, collect_layer_norms=False,
+):
+    lora_scale = lora_scale if lora_scale is not None else cfg.lora_alpha / cfg.lora_rank
+    h = jnp.take(params["embed"], tokens, axis=0)
+    if embed_noise is not None:
+        h = h + embed_noise.astype(h.dtype)
+
+    def body(h, xs):
+        p, l = xs
+        x = rms_norm(h, p["norm_w"])
+        h = h + mamba2_block(x, p, cfg, l, lora_scale)
+        if collect_layer_norms:
+            norm = jnp.sqrt(jnp.sum(jnp.square(h.astype(jnp.float32)), axis=(1, 2)))
+            return h, norm
+        return h, None
+
+    h, norms = jax.lax.scan(body, h, (params["layers"], lora))
+    h = rms_norm(h, params["final_norm_w"])
+    logits = jnp.einsum("bsd,dv->bsv", h, params["lm_head"].astype(h.dtype))
+    if collect_layer_norms:
+        return logits, jnp.zeros((), jnp.float32), norms
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    del max_len  # state is constant-size — the whole point of SSM decode
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    dims = ssm_dims(cfg)
+    L = cfg.num_layers
+    return {
+        "conv": jnp.zeros((L, batch, cfg.ssm.conv_width - 1, dims["conv_ch"]), dtype),
+        "state": jnp.zeros(
+            (L, batch, dims["nheads"], cfg.ssm.head_dim, cfg.ssm.d_state), jnp.float32
+        ),
+    }
+
+
+def ssm_prefill(params, lora, tokens, cfg: ModelConfig, cache_len: int, *, lora_scale=None):
+    del cache_len
+    lora_scale = lora_scale if lora_scale is not None else cfg.lora_alpha / cfg.lora_rank
+    h = jnp.take(params["embed"], tokens, axis=0)
+
+    def body(h, xs):
+        p, l = xs
+        x = rms_norm(h, p["norm_w"])
+        out, (conv_tail, state) = mamba2_prefill(x, p, cfg, l, lora_scale)
+        return h + out, (conv_tail, state)
+
+    h, (conv, state) = jax.lax.scan(body, h, (params["layers"], lora))
+    hl = rms_norm(h[:, -1:], params["final_norm_w"])
+    logits = jnp.einsum("bsd,dv->bsv", hl, params["lm_head"].astype(hl.dtype))
+    cache = {"conv": conv.astype(jnp.dtype(cfg.dtype)), "state": state}
+    return logits, cache, jnp.array(tokens.shape[1], jnp.int32)
+
+
+def ssm_decode_step(params, lora, token, cfg: ModelConfig, cache, position, *, lora_scale=None):
+    del position  # recurrence is position-free
+    lora_scale = lora_scale if lora_scale is not None else cfg.lora_alpha / cfg.lora_rank
+    h = jnp.take(params["embed"], token, axis=0)
+
+    def body(h, xs):
+        p, l, cb, st = xs
+        x = rms_norm(h, p["norm_w"])
+        out, (ncb, nst) = mamba2_decode(x, p, cfg, (cb, st), l, lora_scale)
+        return h + out, (ncb, nst)
+
+    h, (nconv, nstate) = jax.lax.scan(
+        body, h, (params["layers"], lora, cache["conv"], cache["state"])
+    )
+    h = rms_norm(h, params["final_norm_w"])
+    logits = jnp.einsum("bsd,dv->bsv", h, params["lm_head"].astype(h.dtype))
+    return logits, {"conv": nconv, "state": nstate}

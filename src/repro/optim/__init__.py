@@ -1,0 +1,8 @@
+from repro.optim.optimizers import (
+    sgd_init,
+    sgd_update,
+    adamw_init,
+    adamw_update,
+    make_optimizer,
+)
+from repro.optim.schedule import linear_warmup_cosine

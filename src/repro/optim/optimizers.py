@@ -1,0 +1,103 @@
+"""Pure-JAX optimizers (no optax). Operate on arbitrary pytrees.
+
+``make_optimizer`` returns ``(init_fn, update_fn)`` where
+``update_fn(grads, state, params, lr, mask=None)`` applies an optional
+FibecFed update mask (0/1 pytree): masked-out entries receive no update and
+their moments stay untouched — the paper's frozen-neuron semantics
+(§4.3.2), not just a zeroed gradient.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _masked(g, mask_leaf):
+    return g if mask_leaf is None else g * mask_leaf.astype(g.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SGD (+ momentum)
+# ---------------------------------------------------------------------------
+
+
+def sgd_init(params, momentum: float = 0.0):
+    if momentum:
+        return {"mu": jax.tree.map(jnp.zeros_like, params)}
+    return {}
+
+
+def sgd_update(grads, state, params, lr, mask=None, *, momentum: float = 0.0):
+    """`momentum` is a static hyperparameter (close over it, don't trace it)."""
+    if mask is not None:
+        grads = jax.tree.map(lambda g, m: g * m.astype(g.dtype), grads, mask)
+    if momentum:
+        mu = jax.tree.map(lambda m, g: momentum * m + g, state["mu"], grads)
+        new_params = jax.tree.map(lambda p, m: p - lr * m, params, mu)
+        return new_params, {"mu": mu}
+    new_params = jax.tree.map(lambda p, g: p - lr * g, params, grads)
+    return new_params, state
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def adamw_init(params, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.0):
+    del b1, b2, eps, weight_decay  # hyperparams live in the update closure
+    return {
+        "m": jax.tree.map(jnp.zeros_like, params),
+        "v": jax.tree.map(jnp.zeros_like, params),
+        "t": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(grads, state, params, lr, mask=None, *, b1=0.9, b2=0.999,
+                 eps=1e-8, wd=0.0):
+    t = state["t"] + 1
+    if mask is not None:
+        grads = jax.tree.map(lambda g, mk: g * mk.astype(g.dtype), grads, mask)
+    m = jax.tree.map(lambda mm, g: b1 * mm + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda vv, g: b2 * vv + (1 - b2) * jnp.square(g), state["v"], grads)
+    mhat_scale = 1.0 / (1 - b1**t.astype(jnp.float32))
+    vhat_scale = 1.0 / (1 - b2**t.astype(jnp.float32))
+
+    def upd(p, mm, vv, mk=None):
+        step = lr * (mm * mhat_scale) / (jnp.sqrt(vv * vhat_scale) + eps)
+        if wd:
+            step = step + lr * wd * p
+        if mk is not None:
+            step = step * mk.astype(step.dtype)
+        return p - step
+
+    if mask is not None:
+        new_params = jax.tree.map(upd, params, m, v, mask)
+    else:
+        new_params = jax.tree.map(upd, params, m, v)
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+def make_optimizer(name: str, **kw) -> Tuple[Callable, Callable]:
+    if name == "sgd":
+        import functools
+
+        momentum = kw.get("momentum", 0.0)
+        return (
+            lambda p: sgd_init(p, momentum),
+            functools.partial(sgd_update, momentum=momentum),
+        )
+    if name == "adamw":
+        import functools
+
+        upd = functools.partial(
+            adamw_update,
+            b1=kw.get("b1", 0.9),
+            b2=kw.get("b2", 0.999),
+            eps=kw.get("eps", 1e-8),
+            wd=kw.get("weight_decay", 0.0),
+        )
+        return adamw_init, upd
+    raise ValueError(name)

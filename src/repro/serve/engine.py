@@ -1,0 +1,70 @@
+"""Batched serving engine: prefill + decode loop over any ModelFns.
+
+Synchronous batched generation (all requests share a step clock — the
+decode-shape contract of the dry-run). Supports greedy and temperature
+sampling; KV/SSM caches come from the model's ``init_cache``/``prefill``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model_api import ModelFns
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    tokens: np.ndarray  # (B, max_new_tokens)
+    steps: int
+
+
+class ServeEngine:
+    def __init__(self, model: ModelFns, params, lora, *, cache_len: int = 1024):
+        self.model = model
+        self.params = params
+        self.lora = lora
+        self.cache_len = cache_len
+        self._prefill = jax.jit(
+            lambda p, l, batch: model.prefill(p, l, batch, cache_len)
+        )
+        self._decode = jax.jit(model.decode_step)
+
+    def _sample(self, logits, key, temperature: float):
+        logits = logits[:, -1].astype(jnp.float32)
+        if temperature == 0.0:
+            return jnp.argmax(logits, -1)
+        return jax.random.categorical(key, logits / temperature, -1)
+
+    def generate(
+        self,
+        batch: Dict[str, Any],
+        *,
+        max_new_tokens: int = 32,
+        temperature: float = 0.0,
+        eos_id: Optional[int] = None,
+        seed: int = 0,
+    ) -> GenerationResult:
+        logits, cache, pos = self._prefill(self.params, self.lora, batch)
+        key = jax.random.PRNGKey(seed)
+        B = logits.shape[0]
+        out = np.zeros((B, max_new_tokens), np.int32)
+        token = self._sample(logits, key, temperature)[:, None].astype(jnp.int32)
+        done = np.zeros(B, bool)
+        steps = 0
+        for i in range(max_new_tokens):
+            out[:, i] = np.asarray(token[:, 0])
+            if eos_id is not None:
+                done |= out[:, i] == eos_id
+                if done.all():
+                    steps = i + 1
+                    break
+            logits, cache = self._decode(self.params, self.lora, token, cache, pos)
+            key = jax.random.fold_in(key, i)
+            token = self._sample(logits, key, temperature)[:, None].astype(jnp.int32)
+            pos = pos + 1
+            steps = i + 1
+        return GenerationResult(tokens=out, steps=steps)

@@ -1,0 +1,1 @@
+from repro.train.losses import make_loss_fn, make_label_token_loss, lm_loss, cls_loss

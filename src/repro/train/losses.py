@@ -1,0 +1,73 @@
+"""Loss functions (f32 softmax-CE regardless of model dtype)."""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.model_api import ModelFns
+
+
+def _xent(logits: jax.Array, targets: jax.Array) -> jax.Array:
+    """Per-element cross entropy. logits (..., V) f-any, targets (...) int."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return logz - gold
+
+
+def lm_loss(logits: jax.Array, tokens: jax.Array, text_offset: int = 0) -> jax.Array:
+    """Mean next-token CE. logits (B, P+T, V); tokens (B, T) text region
+    starting at position ``text_offset`` within the logits."""
+    pred = logits[:, text_offset : text_offset + tokens.shape[1] - 1]
+    return jnp.mean(_xent(pred, tokens[:, 1:]))
+
+
+def cls_loss(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    return jnp.mean(_xent(logits, labels))
+
+
+def label_token_loss(logits: jax.Array, label_tokens: jax.Array) -> jax.Array:
+    """CE of the *next token after the sequence* against a class-label token —
+    the prompt-style classification objective used in the paper's LLM runs."""
+    return jnp.mean(_xent(logits[:, -1], label_tokens))
+
+
+def make_loss_fn(model: ModelFns) -> Callable:
+    """(params, lora, batch) -> scalar. Dispatches on family/batch contents."""
+    cfg = model.cfg
+
+    def loss_fn(params, lora, batch: Dict[str, Any]):
+        logits, aux = model.forward(params, lora, batch)
+        if cfg.family == "encoder":
+            return cls_loss(logits, batch["labels"]) + aux
+        if "label_token" in batch:
+            return label_token_loss(logits, batch["label_token"]) + aux
+        offset = cfg.num_prefix_embeddings if cfg.family == "vlm" else 0
+        return lm_loss(logits, batch["tokens"], offset) + aux
+
+    return loss_fn
+
+
+def make_label_token_loss(model: ModelFns) -> Callable:
+    def loss_fn(params, lora, batch):
+        logits, aux = model.forward(params, lora, batch)
+        return label_token_loss(logits, batch["label_token"]) + aux
+
+    return loss_fn
+
+
+def make_logits_loss(cfg: ModelConfig) -> Callable:
+    """loss(logits, batch) used by the GAL probe (gradient w.r.t. noise)."""
+
+    def fn(logits, batch):
+        if cfg.family == "encoder":
+            return cls_loss(logits, batch["labels"])
+        if "label_token" in batch:
+            return label_token_loss(logits, batch["label_token"])
+        offset = cfg.num_prefix_embeddings if cfg.family == "vlm" else 0
+        return lm_loss(logits, batch["tokens"], offset)
+
+    return fn

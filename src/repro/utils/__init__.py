@@ -1,0 +1,11 @@
+from repro.utils.tree import (
+    tree_size,
+    tree_bytes,
+    tree_map_with_path_str,
+    tree_zeros_like,
+    tree_add,
+    tree_scale,
+    tree_l2_norm,
+    flatten_dict,
+    unflatten_dict,
+)

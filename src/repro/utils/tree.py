@@ -1,0 +1,78 @@
+"""Small pytree utilities used across the framework (no flax/optax)."""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_size(tree: Any) -> int:
+    """Total number of array elements in a pytree."""
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree))
+
+
+def tree_bytes(tree: Any) -> int:
+    """Total bytes of a pytree (works on ShapeDtypeStruct too)."""
+    total = 0
+    for x in jax.tree.leaves(tree):
+        total += int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
+    return total
+
+
+def tree_map_with_path_str(fn: Callable[[str, Any], Any], tree: Any) -> Any:
+    """tree_map where fn receives a '/'-joined key path string."""
+
+    def _fn(path, leaf):
+        keys = []
+        for p in path:
+            if isinstance(p, jax.tree_util.DictKey):
+                keys.append(str(p.key))
+            elif isinstance(p, jax.tree_util.SequenceKey):
+                keys.append(str(p.idx))
+            else:
+                keys.append(str(p))
+        return fn("/".join(keys), leaf)
+
+    return jax.tree_util.tree_map_with_path(_fn, tree)
+
+
+def tree_zeros_like(tree: Any) -> Any:
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+def tree_add(a: Any, b: Any) -> Any:
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_scale(tree: Any, s) -> Any:
+    return jax.tree.map(lambda x: x * s, tree)
+
+
+def tree_l2_norm(tree: Any) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def flatten_dict(d: Mapping[str, Any], prefix: str = "", sep: str = "/") -> Dict[str, Any]:
+    """Flatten a nested dict into {'a/b/c': leaf}."""
+    out: Dict[str, Any] = {}
+    for k, v in d.items():
+        key = f"{prefix}{sep}{k}" if prefix else str(k)
+        if isinstance(v, Mapping):
+            out.update(flatten_dict(v, key, sep))
+        else:
+            out[key] = v
+    return out
+
+
+def unflatten_dict(d: Mapping[str, Any], sep: str = "/") -> Dict[str, Any]:
+    out: Dict[str, Any] = {}
+    for k, v in d.items():
+        parts = k.split(sep)
+        cur = out
+        for p in parts[:-1]:
+            cur = cur.setdefault(p, {})
+        cur[parts[-1]] = v
+    return out

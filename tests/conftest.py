@@ -1,0 +1,13 @@
+import os
+
+# Tests run on the single real CPU device (the dry-run sets its own XLA_FLAGS
+# in-process; do NOT force 512 host devices here).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,67 @@
+"""Blockwise/flash attention vs exact softmax; KV-cache decode consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import (
+    blockwise_attention,
+    decode_attention,
+    full_attention,
+)
+
+
+def _qkv(rng, B=2, S=128, H=4, KVH=2, D=32):
+    q = jax.random.normal(rng, (B, S, H, D))
+    k = jax.random.normal(jax.random.fold_in(rng, 1), (B, S, KVH, D))
+    v = jax.random.normal(jax.random.fold_in(rng, 2), (B, S, KVH, D))
+    return q, k, v
+
+
+@pytest.mark.parametrize("causal", [True, False])
+def test_blockwise_matches_full(rng, causal):
+    q, k, v = _qkv(rng)
+    a = full_attention(q, k, v, causal=causal)
+    b = blockwise_attention(q, k, v, causal=causal, q_block=32, kv_block=32)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4, atol=2e-4)
+
+
+def test_sliding_window_matches_full_mask(rng):
+    q, k, v = _qkv(rng, S=128)
+    w = 32
+    a = full_attention(q, k, v, causal=True, window=w)
+    b = blockwise_attention(q, k, v, causal=True, window=w, q_block=32, kv_block=32)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4, atol=2e-4)
+
+
+def test_decode_matches_train_attention(rng):
+    """Token-by-token decode with a KV cache == full causal attention rows."""
+    B, S, H, KVH, D = 1, 16, 4, 2, 16
+    q, k, v = _qkv(rng, B, S, H, KVH, D)
+    full = full_attention(q, k, v, causal=True)
+    k_cache = jnp.zeros((B, S, KVH, D))
+    v_cache = jnp.zeros((B, S, KVH, D))
+    for t in range(S):
+        k_cache = k_cache.at[:, t].set(k[:, t])
+        v_cache = v_cache.at[:, t].set(v[:, t])
+        got = decode_attention(q[:, t : t + 1], k_cache, v_cache, jnp.array(t))
+        np.testing.assert_allclose(
+            np.asarray(got[:, 0]), np.asarray(full[:, t]), rtol=2e-4, atol=2e-4
+        )
+
+
+def test_ring_buffer_decode_matches_windowed(rng):
+    """Ring-buffer cache (window W) == sliding-window attention at each step."""
+    B, S, H, KVH, D, W = 1, 24, 2, 2, 16, 8
+    q, k, v = _qkv(rng, B, S, H, KVH, D)
+    ref = full_attention(q, k, v, causal=True, window=W)
+    k_cache = jnp.zeros((B, W, KVH, D))
+    v_cache = jnp.zeros((B, W, KVH, D))
+    for t in range(S):
+        slot = t % W
+        k_cache = k_cache.at[:, slot].set(k[:, t])
+        v_cache = v_cache.at[:, slot].set(v[:, t])
+        got = decode_attention(q[:, t : t + 1], k_cache, v_cache, jnp.array(t), ring=True)
+        np.testing.assert_allclose(
+            np.asarray(got[:, 0]), np.asarray(ref[:, t]), rtol=2e-4, atol=2e-4
+        )

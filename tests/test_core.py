@@ -1,0 +1,186 @@
+"""FibecFed core: fisher scores, curriculum, GAL selection, sparse masks."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import ModelConfig
+from repro.core import (
+    CurriculumSchedule,
+    batch_fisher_scores,
+    fim_diag,
+    fim_momentum_update,
+    num_selected_batches,
+    order_batches,
+    per_sample_fisher_scores,
+    selected_batch_ids,
+)
+from repro.core.gal import (
+    adversarial_perturbation,
+    aggregate_layer_scores,
+    gal_layer_count,
+    layer_sensitivity_scores,
+    lossless_rank_fraction,
+    select_gal_layers,
+)
+from repro.core.sparse import mask_sparsity, neuron_importance, select_neuron_masks
+from repro.data import make_keyword_task
+from repro.models import build_model
+from repro.train import make_loss_fn
+from repro.train.losses import make_logits_loss
+
+TINY = ModelConfig(
+    name="tiny", family="dense", num_layers=3, d_model=32, num_heads=2,
+    num_kv_heads=2, d_ff=64, vocab_size=512, head_dim=16, dtype="float32",
+    lora_rank=2, max_seq_len=64,
+)
+
+
+@pytest.fixture(scope="module")
+def setup(rng):
+    model = build_model(TINY)
+    params = model.init_params(rng)
+    lora = model.init_lora(rng)
+    task = make_keyword_task(n_samples=32, seq_len=16, vocab_size=512, seed=0)
+    batch = {k: v[:8] for k, v in task.data.items() if k != "label"}
+    return model, params, lora, task, batch
+
+
+def test_per_sample_fisher_nonnegative_and_shape(setup):
+    model, params, lora, task, batch = setup
+    loss_fn = make_loss_fn(model)
+    s = per_sample_fisher_scores(loss_fn, params, lora, batch)
+    assert s.shape == (8,)
+    assert bool(jnp.all(s >= 0))
+
+
+def test_batch_score_is_sum_of_sample_scores(setup):
+    model, params, lora, task, batch = setup
+    loss_fn = make_loss_fn(model)
+    s = per_sample_fisher_scores(loss_fn, params, lora, batch)
+    batches = jax.tree.map(lambda x: x.reshape(2, 4, *x.shape[1:]), batch)
+    bs = batch_fisher_scores(loss_fn, params, lora, batches)
+    np.testing.assert_allclose(
+        np.asarray(bs), np.asarray(s.reshape(2, 4).sum(-1)), rtol=1e-5
+    )
+
+
+def test_fim_diag_is_mean_of_squared_grads(setup):
+    model, params, lora, task, batch = setup
+    loss_fn = make_loss_fn(model)
+    fim = fim_diag(loss_fn, params, lora, batch)
+    # trace of fim == mean of per-sample scores
+    tr = sum(float(jnp.sum(x)) for x in jax.tree.leaves(fim))
+    s = per_sample_fisher_scores(loss_fn, params, lora, batch)
+    np.testing.assert_allclose(tr, float(jnp.mean(s)), rtol=1e-5)
+
+
+def test_fim_momentum(setup):
+    model, params, lora, task, batch = setup
+    loss_fn = make_loss_fn(model)
+    f1 = fim_diag(loss_fn, params, lora, batch)
+    f2 = fim_momentum_update(f1, f1, 0.9)
+    for a, b in zip(jax.tree.leaves(f1), jax.tree.leaves(f2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+    f0 = fim_momentum_update(None, f1, 0.9)
+    assert jax.tree.structure(f0) == jax.tree.structure(f1)
+
+
+# ---------------------------------------------------------------------------
+# curriculum
+# ---------------------------------------------------------------------------
+
+
+def test_curriculum_fraction_monotone():
+    for strategy in ("linear", "sqrt", "quadratic", "exp"):
+        sch = CurriculumSchedule(strategy=strategy, beta=0.5, alpha=0.8, total_rounds=50)
+        fracs = [sch.fraction(t) for t in range(50)]
+        assert all(b >= a - 1e-12 for a, b in zip(fracs, fracs[1:])), strategy
+        assert fracs[0] >= 0.5 - 1e-9
+        assert fracs[-1] <= 1.0 + 1e-9
+        assert sch.fraction(49) == 1.0  # alpha=0.8 < 1: all data before the end
+
+
+def test_selected_batches_grow():
+    sch = CurriculumSchedule(strategy="linear", beta=0.4, alpha=0.8, total_rounds=20)
+    order = np.argsort(np.random.default_rng(0).random(10))
+    counts = [len(selected_batch_ids(sch, t, order)) for t in range(20)]
+    assert counts == sorted(counts)
+    assert counts[0] == 4 and counts[-1] == 10
+
+
+def test_order_batches_ascending():
+    scores = np.array([3.0, 1.0, 2.0])
+    assert list(order_batches(scores)) == [1, 2, 0]
+
+
+# ---------------------------------------------------------------------------
+# GAL
+# ---------------------------------------------------------------------------
+
+
+def test_adversarial_perturbation_norm_budget(rng):
+    g = jax.random.normal(rng, (4, 8, 8))
+    for p in (2.0,):
+        eps = adversarial_perturbation(g, gamma=0.1, p=p)
+        norms = jnp.sqrt(jnp.sum(eps**2, axis=(1, 2)))
+        np.testing.assert_allclose(np.asarray(norms), 0.1, rtol=1e-5)
+        # maximizes <eps, g>: should be parallel to g for p=2
+        dots = jnp.sum(eps * g, axis=(1, 2))
+        ne = jnp.sqrt(jnp.sum(eps**2, axis=(1, 2)))
+        ng = jnp.sqrt(jnp.sum(g**2, axis=(1, 2)))
+        assert bool(jnp.all(dots / (ne * ng) > 0.999))
+
+
+def test_layer_sensitivity_scores_shape(setup):
+    model, params, lora, task, batch = setup
+    scores = layer_sensitivity_scores(
+        model.forward_probe, make_logits_loss(TINY), params, lora, batch,
+        gamma=0.05, p=2.0, noise_shape=(8, 16, 32),
+    )
+    assert scores.shape == (TINY.num_layers,)
+    assert bool(jnp.all(jnp.isfinite(scores)))
+
+
+def test_aggregate_layer_scores_weighted():
+    s1, s2 = np.array([1.0, 0.0]), np.array([0.0, 1.0])
+    agg = aggregate_layer_scores([s1, s2], [3, 1])
+    np.testing.assert_allclose(agg, [0.75, 0.25])
+
+
+def test_select_gal_layers_topk():
+    mask = select_gal_layers(np.array([0.1, 0.9, 0.5, 0.7]), 2)
+    assert list(mask) == [False, True, False, True]
+
+
+def test_gal_layer_count():
+    assert gal_layer_count([0.5, 1.0], [1, 1], 24) == 18
+    assert 1 <= gal_layer_count([0.0], [1], 24) <= 24
+
+
+def test_lossless_rank_fraction_bounds(setup, rng):
+    model, params, lora, task, batch = setup
+    loss_fn = make_loss_fn(model)
+    frac = lossless_rank_fraction(loss_fn, params, lora, batch, rng, iters=8)
+    assert 0.0 <= frac <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# sparse
+# ---------------------------------------------------------------------------
+
+
+def test_neuron_masks_keep_fraction(setup):
+    model, params, lora, task, batch = setup
+    loss_fn = make_loss_fn(model)
+    fim = fim_diag(loss_fn, params, lora, batch)
+    imp = neuron_importance(fim)
+    masks = select_neuron_masks(imp, rho=0.5)
+    sp = mask_sparsity(masks)
+    assert 0.4 <= sp <= 0.6
+    # top-scored neuron is always kept
+    for group in imp:
+        for t in imp[group]:
+            best = jnp.argmax(imp[group][t], axis=-1)
+            kept = jnp.take_along_axis(masks[group][t], best[..., None], axis=-1)
+            assert bool(jnp.all(kept == 1.0))

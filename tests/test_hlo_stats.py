@@ -1,0 +1,85 @@
+"""The trip-count-aware HLO analyzer (the §Roofline measurement instrument)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.hlo_stats import analyze_hlo, parse_computations, top_traffic_ops
+
+
+def _compile_text(fn, *specs):
+    return jax.jit(fn).lower(*specs).compile().as_text()
+
+
+def _scan_matmul_text(n, d=128):
+    W = jnp.zeros((n, d, d))
+
+    def f(x):
+        def body(h, w):
+            return h @ w, None
+
+        h, _ = jax.lax.scan(body, x, W)
+        return h
+
+    return _compile_text(f, jax.ShapeDtypeStruct((d, d), jnp.float32))
+
+
+def test_flops_scale_with_trip_count():
+    d = 128
+    s2 = analyze_hlo(_scan_matmul_text(2, d))
+    s8 = analyze_hlo(_scan_matmul_text(8, d))
+    assert s2["flops"] == 2 * 2 * d**3
+    assert s8["flops"] == 8 * 2 * d**3
+
+
+def test_nested_scan_multiplies():
+    d = 64
+    W = jnp.zeros((3, 4, d, d))
+
+    def f(x):
+        def outer(h, wo):
+            def inner(h2, wi):
+                return h2 @ wi, None
+
+            h, _ = jax.lax.scan(inner, h, wo)
+            return h, None
+
+        h, _ = jax.lax.scan(outer, x, W)
+        return h
+
+    st = analyze_hlo(_compile_text(f, jax.ShapeDtypeStruct((d, d), jnp.float32)))
+    assert st["flops"] == 3 * 4 * 2 * d**3
+
+
+def test_unrolled_matches_scan():
+    d = 128
+
+    def f(x):
+        for _ in range(4):
+            x = x @ jnp.ones((d, d))
+        return x
+
+    st = analyze_hlo(_compile_text(f, jax.ShapeDtypeStruct((d, d), jnp.float32)))
+    assert st["flops"] == 4 * 2 * d**3
+
+
+def test_traffic_positive_and_bounded():
+    txt = _scan_matmul_text(4)
+    st = analyze_hlo(txt)
+    # at least: 4 result writes; at most a few x total tensor bytes
+    lower = 4 * 128 * 128 * 4
+    assert lower <= st["memory_traffic_bytes"] <= 100 * lower
+
+
+def test_top_traffic_ops_returns_labels():
+    txt = _scan_matmul_text(4)
+    top = top_traffic_ops(txt, k=5)
+    assert len(top) >= 1
+    assert all(isinstance(name, str) and bytes_ > 0 for name, bytes_ in top)
+
+
+def test_parse_computations_finds_entry_and_whiles():
+    txt = _scan_matmul_text(2)
+    comps = parse_computations(txt)
+    assert any(c.is_entry for c in comps.values())
+    whiles = [w for c in comps.values() for w in c.whiles]
+    assert whiles and whiles[0][2] == 2  # trip count parsed

@@ -1,0 +1,83 @@
+"""LoRA trees, GAL masks, neuron masks across all families."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, ASSIGNED
+from repro.lora import (
+    gal_mask_tree,
+    init_lora,
+    lora_num_logical_layers,
+    neuron_mask_tree,
+)
+
+
+@pytest.mark.parametrize("name", ASSIGNED)
+def test_gal_mask_structure(rng, name):
+    cfg = ARCHS[name].reduced()
+    lora = init_lora(rng, cfg)
+    L = lora_num_logical_layers(cfg)
+    gal = np.zeros(L, bool)
+    gal[0] = True
+    mask = gal_mask_tree(cfg, lora, gal)
+    assert jax.tree.structure(mask) == jax.tree.structure(lora)
+    # exactly layer 0's leaves are 1
+    for group in lora:
+        for target, ab in lora[group].items():
+            m = mask[group][target]["a"]
+            if m.ndim == ab["a"].ndim:  # stacked
+                assert float(m.reshape(m.shape[0], -1)[0].max()) in (0.0, 1.0)
+
+
+def test_gal_mask_merging_semantics(rng):
+    cfg = ARCHS["qwen2-0.5b"].reduced()
+    lora = init_lora(rng, cfg)
+    L = lora_num_logical_layers(cfg)
+    gal = np.zeros(L, bool)
+    gal[1] = True
+    mask = gal_mask_tree(cfg, lora, gal)
+    global_lora = jax.tree.map(jnp.ones_like, lora)
+    local_lora = jax.tree.map(jnp.zeros_like, lora)
+    merged = jax.tree.map(
+        lambda g, l, m: m * g + (1 - m) * l, global_lora, local_lora, mask
+    )
+    a = merged["layers"]["wq"]["a"]
+    np.testing.assert_allclose(np.asarray(a[1]), 1.0)
+    np.testing.assert_allclose(np.asarray(a[0]), 0.0)
+
+
+@pytest.mark.parametrize("name", ["qwen2-0.5b", "mamba2-1.3b", "zamba2-7b", "whisper-large-v3"])
+def test_neuron_mask_tree_structure(rng, name):
+    cfg = ARCHS[name].reduced()
+    lora = init_lora(rng, cfg)
+    keep = {}
+    for group, targets in lora.items():
+        keep[group] = {}
+        for t, ab in targets.items():
+            b = ab["b"]
+            if b.ndim == 3:
+                keep[group][t] = jnp.ones((b.shape[0], b.shape[2]))
+            else:
+                keep[group][t] = jnp.ones((b.shape[1],))
+    mask = neuron_mask_tree(cfg, lora, keep)
+    assert jax.tree.structure(mask) == jax.tree.structure(lora)
+    for group in mask:
+        for t in mask[group]:
+            assert mask[group][t]["a"].shape == lora[group][t]["a"].shape
+            assert mask[group][t]["b"].shape == lora[group][t]["b"].shape
+
+
+def test_lora_zero_b_means_identity(rng):
+    """Freshly-initialized LoRA (b=0) must not change the forward pass."""
+    from repro.models import build_model
+
+    cfg = ARCHS["qwen3-0.6b"].reduced()
+    model = build_model(cfg)
+    params = model.init_params(rng)
+    lora = model.init_lora(rng)
+    zeros = jax.tree.map(jnp.zeros_like, lora)
+    tokens = jax.random.randint(rng, (2, 16), 0, cfg.vocab_size)
+    l1, _ = model.forward(params, lora, {"tokens": tokens})
+    l2, _ = model.forward(params, zeros, {"tokens": tokens})
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), atol=1e-5)

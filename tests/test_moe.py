@@ -1,0 +1,81 @@
+"""MoE routing invariants: capacity, combine-weight normalization, decode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import MoEConfig
+from repro.models.moe import apply_moe, capacity, init_moe, route
+
+MCFG = MoEConfig(num_experts=4, top_k=2, d_ff_expert=32, router_group_size=16,
+                 capacity_factor=1.5)
+
+
+def test_capacity_formula():
+    assert capacity(16, MCFG) == int(np.ceil(16 * 2 * 1.5 / 4))
+    assert capacity(1, MCFG) >= 1
+
+
+def test_route_dispatch_shapes_and_slots(rng):
+    x = jax.random.normal(rng, (2, 3, 16, 8))  # (B, n, G, D)
+    w = jax.random.normal(jax.random.fold_in(rng, 1), (8, 4))
+    dispatch, combine, aux = route(x, w, MCFG)
+    C = capacity(16, MCFG)
+    assert dispatch.shape == (2, 3, 16, 4, C)
+    assert combine.shape == dispatch.shape
+    d = np.asarray(dispatch)
+    # each (expert, slot) holds at most one token
+    assert (d.sum(axis=2) <= 1.0 + 1e-6).all()
+    # each token occupies at most top_k slots
+    assert (d.sum(axis=(3, 4)) <= MCFG.top_k + 1e-6).all()
+    assert float(aux) >= 0.0
+
+
+def test_route_combine_weights_bounded(rng):
+    x = jax.random.normal(rng, (1, 1, 16, 8))
+    w = jax.random.normal(jax.random.fold_in(rng, 1), (8, 4))
+    dispatch, combine, _ = route(x, w, MCFG)
+    c = np.asarray(combine).sum(axis=(3, 4))  # per-token total weight
+    assert (c <= 1.0 + 1e-5).all()  # =1 when nothing dropped, <1 if dropped
+    assert (c >= 0.0).all()
+
+
+def test_moe_identical_tokens_identical_outputs(rng):
+    """Permutation-ish invariance: duplicate tokens must get equal outputs
+    (capacity allowing), since routing is deterministic in the token value."""
+    D = 8
+    p = init_moe(rng, 1, D, MCFG, jnp.float32)
+    p1 = jax.tree.map(lambda a: a[0], p)
+    tok = jax.random.normal(jax.random.fold_in(rng, 5), (1, 1, D))
+    x = jnp.tile(tok, (1, 16, 1))  # 16 identical tokens, one group
+    y, _ = apply_moe(x, p1, MCFG)
+    y = np.asarray(y)[0]
+    kept = np.abs(y).sum(-1) > 1e-9  # tokens over capacity are dropped
+    assert kept.sum() >= capacity(16, MCFG)
+    ref_row = y[kept][0]
+    np.testing.assert_allclose(y[kept], np.tile(ref_row, (kept.sum(), 1)), rtol=1e-4)
+
+
+def test_moe_decode_single_token_path(rng):
+    D = 8
+    p = init_moe(rng, 1, D, MCFG, jnp.float32)
+    p1 = jax.tree.map(lambda a: a[0], p)
+    x = jax.random.normal(jax.random.fold_in(rng, 7), (4, 1, D))  # decode: S=1
+    y, aux = apply_moe(x, p1, MCFG)
+    assert y.shape == (4, 1, D)
+    assert bool(jnp.all(jnp.isfinite(y)))
+
+
+def test_shared_expert_adds_dense_path(rng):
+    mcfg = MoEConfig(num_experts=4, top_k=1, d_ff_expert=16, shared_expert=True,
+                     d_ff_shared=16, router_group_size=8)
+    D = 8
+    p = init_moe(rng, 1, D, mcfg, jnp.float32)
+    p1 = jax.tree.map(lambda a: a[0], p)
+    x = jax.random.normal(rng, (1, 8, D))
+    y_with, _ = apply_moe(x, p1, mcfg)
+    # zero the shared expert -> output must change
+    p1z = dict(p1)
+    p1z["s_down"] = jnp.zeros_like(p1["s_down"])
+    y_without, _ = apply_moe(x, p1z, mcfg)
+    assert float(jnp.max(jnp.abs(y_with - y_without))) > 1e-6

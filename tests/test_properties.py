@@ -1,0 +1,137 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.curriculum import (
+    CurriculumSchedule,
+    num_selected_batches,
+    order_batches,
+    selected_batch_ids,
+)
+from repro.core.gal import adversarial_perturbation, select_gal_layers
+from repro.core.sparse import select_neuron_masks
+from repro.data.partition import dirichlet_partition
+from repro.optim import adamw_init, adamw_update, sgd_init, sgd_update
+from repro.utils import flatten_dict, unflatten_dict
+
+
+@settings(deadline=None, max_examples=30)
+@given(
+    strategy=st.sampled_from(["linear", "sqrt", "quadratic", "exp"]),
+    beta=st.floats(0.05, 1.0),
+    alpha=st.floats(0.1, 1.0),
+    total=st.integers(2, 200),
+)
+def test_curriculum_fraction_bounds_and_monotone(strategy, beta, alpha, total):
+    sch = CurriculumSchedule(strategy=strategy, beta=beta, alpha=alpha, total_rounds=total)
+    prev = 0.0
+    for t in range(0, total, max(total // 17, 1)):
+        f = sch.fraction(t)
+        assert beta - 1e-9 <= f <= 1.0 + 1e-9
+        assert f >= prev - 1e-9
+        prev = f
+
+
+@settings(deadline=None, max_examples=30)
+@given(
+    n_batches=st.integers(1, 64),
+    t=st.integers(0, 100),
+)
+def test_num_selected_batches_in_range(n_batches, t):
+    sch = CurriculumSchedule(total_rounds=100)
+    n = num_selected_batches(sch, t, n_batches)
+    assert 1 <= n <= n_batches
+
+
+@settings(deadline=None, max_examples=20)
+@given(scores=st.lists(st.floats(-1e3, 1e3, allow_nan=False), min_size=1, max_size=64))
+def test_order_batches_is_permutation_sorted(scores):
+    scores = np.asarray(scores)
+    order = order_batches(scores)
+    assert sorted(order) == list(range(len(scores)))
+    assert np.all(np.diff(scores[order]) >= -1e-12)
+
+
+@settings(deadline=None, max_examples=20)
+@given(
+    n=st.integers(1, 32),
+    k=st.integers(1, 40),
+)
+def test_select_gal_layers_count(n, k):
+    scores = np.random.default_rng(0).random(n)
+    mask = select_gal_layers(scores, k)
+    assert mask.sum() == min(max(k, 1), n)
+    # selected layers have scores >= every unselected
+    if mask.sum() < n:
+        assert scores[mask].min() >= scores[~mask].max() - 1e-12
+
+
+@settings(deadline=None, max_examples=20)
+@given(
+    rho=st.floats(0.05, 1.0),
+    d_out=st.integers(2, 96),
+    layers=st.integers(1, 4),
+)
+def test_neuron_mask_fraction(rho, d_out, layers):
+    scores = jnp.asarray(np.random.default_rng(1).random((layers, d_out)))
+    masks = select_neuron_masks({"g": {"t": scores}}, rho)
+    kept = int(masks["g"]["t"].sum())
+    expected = max(1, int(round(rho * d_out)))
+    # ties can keep a couple extra
+    assert kept >= expected * layers
+
+
+@settings(deadline=None, max_examples=15)
+@given(
+    gamma=st.floats(1e-3, 1.0),
+    seed=st.integers(0, 1000),
+)
+def test_perturbation_budget_holds(gamma, seed):
+    g = jax.random.normal(jax.random.PRNGKey(seed), (3, 16)) + 1e-6
+    eps = adversarial_perturbation(g, gamma, p=2.0)
+    norms = np.sqrt(np.sum(np.asarray(eps) ** 2, axis=1))
+    assert np.all(norms <= gamma * (1 + 1e-4))
+
+
+@settings(deadline=None, max_examples=10)
+@given(
+    n_clients=st.integers(1, 20),
+    alpha=st.floats(0.05, 10.0),
+    n=st.integers(20, 200),
+)
+def test_dirichlet_partition_covers_all_clients(n_clients, alpha, n):
+    labels = np.random.default_rng(0).integers(0, 4, n)
+    parts = dirichlet_partition(labels, n_clients, alpha, seed=0)
+    assert len(parts) == n_clients
+    assert all(len(p) >= 2 for p in parts)
+
+
+@settings(deadline=None, max_examples=10)
+@given(seed=st.integers(0, 100))
+def test_masked_update_never_touches_frozen(seed):
+    key = jax.random.PRNGKey(seed)
+    params = {"w": jax.random.normal(key, (8, 8))}
+    grads = {"w": jax.random.normal(jax.random.fold_in(key, 1), (8, 8))}
+    mask = {"w": (jax.random.uniform(jax.random.fold_in(key, 2), (8, 8)) > 0.5).astype(jnp.float32)}
+    for init, upd in [(sgd_init, sgd_update), (adamw_init, adamw_update)]:
+        st_ = init(params)
+        new, _ = upd(grads, st_, params, 0.1, mask)
+        frozen = np.asarray(mask["w"]) == 0.0
+        np.testing.assert_array_equal(
+            np.asarray(new["w"])[frozen], np.asarray(params["w"])[frozen]
+        )
+
+
+@settings(deadline=None, max_examples=20)
+@given(
+    keys=st.lists(
+        st.text(alphabet="abcdef", min_size=1, max_size=4), min_size=1, max_size=8, unique=True
+    )
+)
+def test_flatten_unflatten_roundtrip(keys):
+    tree = {k: {"x": np.zeros(2), "y": {"z": np.ones(3)}} for k in keys}
+    flat = flatten_dict(tree)
+    rt = unflatten_dict(flat)
+    assert jax.tree.structure(rt) == jax.tree.structure(tree)

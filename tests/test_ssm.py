@@ -1,0 +1,71 @@
+"""SSD: chunked train path == step-by-step recurrence; prefill/decode caches."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.ssm import ssd_chunked, ssd_decode_step
+
+
+def test_chunked_matches_recurrence(rng):
+    B, S, nh, hd, N = 2, 64, 2, 16, 8
+    x = jax.random.normal(rng, (B, S, nh, hd)) * 0.5
+    a = -jnp.abs(jax.random.normal(jax.random.fold_in(rng, 1), (B, S, nh))) * 0.2
+    b = jax.random.normal(jax.random.fold_in(rng, 2), (B, S, N)) * 0.5
+    c = jax.random.normal(jax.random.fold_in(rng, 3), (B, S, N)) * 0.5
+    y_chunk, state_chunk = ssd_chunked(x, a, b, c, chunk=16)
+
+    state = jnp.zeros((B, nh, hd, N))
+    ys = []
+    for t in range(S):
+        y, state = ssd_decode_step(x[:, t], a[:, t], b[:, t], c[:, t], state)
+        ys.append(y)
+    y_rec = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_rec), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(state_chunk), np.asarray(state), rtol=1e-4, atol=1e-4)
+
+
+def test_chunked_initial_state_composition(rng):
+    """SSD over [first half] then [second half with carried state] == full."""
+    B, S, nh, hd, N = 1, 32, 2, 8, 4
+    x = jax.random.normal(rng, (B, S, nh, hd)) * 0.5
+    a = -jnp.abs(jax.random.normal(jax.random.fold_in(rng, 1), (B, S, nh))) * 0.2
+    b = jax.random.normal(jax.random.fold_in(rng, 2), (B, S, N)) * 0.5
+    c = jax.random.normal(jax.random.fold_in(rng, 3), (B, S, N)) * 0.5
+    y_full, state_full = ssd_chunked(x, a, b, c, chunk=8)
+    h = S // 2
+    y1, s1 = ssd_chunked(x[:, :h], a[:, :h], b[:, :h], c[:, :h], chunk=8)
+    y2, s2 = ssd_chunked(
+        x[:, h:], a[:, h:], b[:, h:], c[:, h:], chunk=8, initial_state=s1
+    )
+    np.testing.assert_allclose(np.asarray(y_full[:, :h]), np.asarray(y1), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(y_full[:, h:]), np.asarray(y2), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(state_full), np.asarray(s2), rtol=1e-4, atol=1e-4)
+
+
+import pytest
+
+
+@pytest.mark.parametrize("arch", ["mamba2-1.3b", "zamba2-7b"])
+def test_mamba_model_prefill_decode_consistency(rng, arch):
+    """Full-forward logits at position t == prefill(t tokens) logits."""
+    from repro.configs import ARCHS
+    from repro.models import build_model
+
+    cfg = ARCHS[arch].reduced()
+    model = build_model(cfg)
+    params = model.init_params(rng)
+    lora = model.init_lora(rng)
+    tokens = jax.random.randint(rng, (1, 32), 0, cfg.vocab_size)
+    logits_full, _ = model.forward(params, lora, {"tokens": tokens})
+    logits_pre, cache, pos = model.prefill(params, lora, {"tokens": tokens}, 64)
+    np.testing.assert_allclose(
+        np.asarray(logits_full[:, -1:]), np.asarray(logits_pre), rtol=2e-3, atol=2e-3
+    )
+    # decode continues: full forward over t+1 tokens == decode_step after prefill
+    tok_next = jnp.argmax(logits_pre[:, -1], -1)[:, None].astype(jnp.int32)
+    logits_dec, _ = model.decode_step(params, lora, tok_next, cache, pos)
+    tokens2 = jnp.concatenate([tokens, tok_next], axis=1)
+    logits_full2, _ = model.forward(params, lora, {"tokens": tokens2})
+    np.testing.assert_allclose(
+        np.asarray(logits_dec[:, 0]), np.asarray(logits_full2[:, -1]), rtol=2e-3, atol=2e-3
+    )
