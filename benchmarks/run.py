@@ -21,6 +21,7 @@ import traceback
 
 MODULES = [
     "kernels_bench",
+    "fl_round_bench",
     "table1_accuracy",
     "table2_time",
     "table13_comm",

@@ -21,4 +21,9 @@ from repro.core.sparse import (
     neuron_importance,
     select_neuron_masks,
 )
-from repro.core.fibecfed import FibecFed
+from repro.core.fibecfed import ENGINES, FibecFed, clear_compile_caches
+from repro.core.engine import (
+    build_round_fn,
+    build_difficulty_fn,
+    build_fim_warmup_fn,
+)

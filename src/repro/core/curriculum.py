@@ -60,3 +60,31 @@ def selected_batch_ids(
     """Formula 19: batches with rank j < B_k^t are selected for round t."""
     count = num_selected_batches(schedule, t, len(order))
     return order[:count]
+
+
+def step_plan(
+    schedule: CurriculumSchedule,
+    t: int,
+    orders,
+    local_epochs: int = 1,
+):
+    """Padded per-client step schedule for the vectorized round engine.
+
+    ``orders`` is the chosen clients' curriculum orders (ragged). Returns
+    ``(batch_idx (k, S) int32, step_valid (k, S) f32)`` where
+    ``S = local_epochs * max_selected``: step ``s`` of client ``i`` trains on
+    batch ``batch_idx[i, s]`` iff ``step_valid[i, s]``, replaying exactly the
+    loop engine's epoch-major traversal of ``selected_batch_ids``. Padded
+    steps keep index 0 and are masked to no-ops by the engine.
+    """
+    sels = [selected_batch_ids(schedule, t, o) for o in orders]
+    max_sel = max(len(s) for s in sels)
+    k, S = len(sels), local_epochs * max_sel
+    batch_idx = np.zeros((k, S), np.int32)
+    step_valid = np.zeros((k, S), np.float32)
+    for i, sel in enumerate(sels):
+        for e in range(local_epochs):
+            lo = e * max_sel
+            batch_idx[i, lo : lo + len(sel)] = sel
+            step_valid[i, lo : lo + len(sel)] = 1.0
+    return batch_idx, step_valid

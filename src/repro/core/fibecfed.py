@@ -11,6 +11,18 @@ Tuning phase (Lines 11-19): sample K devices, merge global GAL params into
 each client's LoRA, curriculum-select batches, run masked local SGD/AdamW,
 FedAvg the GAL part on the server.
 
+Two interchangeable round engines (``engine=``):
+
+* ``"vectorized"`` (default) — clients' LoRA/opt-state/mask pytrees are
+  stacked along a leading client axis and the whole round runs as one jitted
+  device program (``repro.core.engine``): ``lax.scan`` over curriculum steps
+  inside a ``vmap`` over clients, with the weighted GAL FedAvg fused in and
+  buffer donation. The init phase likewise scores all (client, batch) cells
+  in one call and batches the FIM warmup.
+* ``"loop"`` — the legacy reference path: one jitted call per (client, batch)
+  step, host-side merge and FedAvg. Kept for equivalence testing
+  (``tests/test_engine_equivalence.py``) and as the semantic spec.
+
 Baseline/ablation switches (used by benchmarks, mirroring the paper's
 comparisons): ``difficulty_metric`` (fisher | loss | length | random),
 ``curriculum`` strategies, ``gal_mode`` (importance | full | random |
@@ -25,17 +37,47 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.config import FibecFedConfig, ModelConfig
+from repro.config import FibecFedConfig
 from repro.core import curriculum as curr
+from repro.core import engine as eng
 from repro.core import fisher as fish
 from repro.core import gal as galmod
 from repro.core import sparse as sparsemod
 from repro.core.curriculum import CurriculumSchedule
-from repro.data.pipeline import gather_batch, make_batches
-from repro.lora import gal_mask_tree, neuron_mask_tree, zeros_like_lora
+from repro.data.pipeline import gather_batch, make_batches, stack_clients
+from repro.lora import gal_mask_tree, neuron_mask_tree
 from repro.models.model_api import ModelFns
 from repro.optim import make_optimizer
 from repro.train.losses import make_logits_loss
+
+ENGINES = ("vectorized", "loop")
+
+# Compiled programs shared across FibecFed instances. Runners built on the
+# same model/loss_fn objects (every baseline preset in a comparison, both
+# engines in an equivalence check) would otherwise re-jit identical programs
+# per instance — compile time dwarfs run time at test/benchmark scale. Keys
+# are (kind, loss_fn/probe_fn, hyperparams...); function objects hash by
+# identity, so distinct models never collide.
+_PROGRAM_MEMO: Dict[tuple, Any] = {}
+
+
+def _memo(key, build):
+    if key not in _PROGRAM_MEMO:
+        _PROGRAM_MEMO[key] = build()
+    return _PROGRAM_MEMO[key]
+
+
+def clear_compile_caches() -> None:
+    """Drop all memoized programs (and cached loss functions).
+
+    The memo intentionally pins loss functions, models, and XLA executables
+    for the process lifetime; a long-lived sweep over many models can call
+    this between models to bound resident memory.
+    """
+    from repro.train import losses as _losses
+
+    _PROGRAM_MEMO.clear()
+    _losses._LOSS_FN_CACHE.clear()
 
 
 @dataclasses.dataclass
@@ -44,13 +86,28 @@ class ClientState:
     n: int
     batches: List[np.ndarray]
     order: np.ndarray  # curriculum order over batches
-    lora: Any  # full local LoRA tree
     opt_state: Any
     fim: Any = None  # momentum diag-FIM
     neuron_mask: Any = None  # update-mask tree (or None = dense)
     difficulty: Optional[np.ndarray] = None
     layer_scores: Optional[np.ndarray] = None
     lossless_fraction: float = 1.0
+    # Either a concrete LoRA tree (loop engine) or a zero-cost view into the
+    # vectorized engine's stacked tree, materialized only on access so the
+    # round hot path never pays for per-client host bookkeeping.
+    _lora: Any = None
+    _lora_view: Optional[Callable[[], Any]] = None
+
+    @property
+    def lora(self) -> Any:
+        if self._lora_view is not None:
+            return self._lora_view()
+        return self._lora
+
+    @lora.setter
+    def lora(self, value: Any) -> None:
+        self._lora = value
+        self._lora_view = None
 
 
 class FibecFed:
@@ -65,8 +122,11 @@ class FibecFed:
         difficulty_metric: str = "fisher",
         gal_mode: str = "importance",
         sparse_update: bool = True,
+        engine: str = "vectorized",
         seed: int = 0,
     ):
+        if engine not in ENGINES:
+            raise ValueError(f"engine must be one of {ENGINES}, got {engine!r}")
         self.model = model
         self.cfg = model.cfg
         self.loss_fn = loss_fn
@@ -74,13 +134,18 @@ class FibecFed:
         self.difficulty_metric = difficulty_metric
         self.gal_mode = gal_mode
         self.sparse_update = sparse_update
+        self.engine = engine
         self.rng = np.random.default_rng(seed)
         self.key = jax.random.PRNGKey(seed)
 
         self.params = model.init_params(jax.random.fold_in(self.key, 0))
         init_lora = model.init_lora(jax.random.fold_in(self.key, 1))
+        # private copy: global_lora's buffers are donated by the vectorized
+        # round program, and mask building needs live arrays afterwards
+        self._init_lora = jax.tree.map(jnp.copy, init_lora)
         self.global_lora = init_lora  # server copy (GAL part authoritative)
 
+        self.optimizer_name = optimizer
         self.opt_init, self.opt_update = make_optimizer(optimizer)
 
         self.schedule = CurriculumSchedule(
@@ -90,6 +155,7 @@ class FibecFed:
             total_rounds=fl.rounds,
         )
 
+        vectorized = engine == "vectorized"
         self.clients: List[ClientState] = []
         for cd in client_data:
             n = len(next(iter(cd.values())))
@@ -99,57 +165,128 @@ class FibecFed:
                     n=n,
                     batches=make_batches(n, fl.batch_size),
                     order=np.arange(max(1, (n + fl.batch_size - 1) // fl.batch_size)),
-                    lora=jax.tree.map(jnp.copy, init_lora),
-                    opt_state=self.opt_init(init_lora),
+                    # loop engine: concrete per-client LoRA/opt copies; the
+                    # vectorized engine's client state lives in stacked trees
+                    # and clients get lazy views (below) instead
+                    _lora=None if vectorized else jax.tree.map(jnp.copy, init_lora),
+                    opt_state=None if vectorized else self.opt_init(init_lora),
                 )
             )
 
+        if vectorized:
+            C = len(self.clients)
+            stack = stack_clients(client_data, fl.batch_size)
+            self._stack_data = {k: jnp.asarray(v) for k, v in stack.data.items()}
+            self._sample_valid = jnp.asarray(stack.sample_valid)
+            self._stacked_lora = jax.tree.map(
+                lambda x: jnp.repeat(x[None], C, axis=0), init_lora
+            )
+            opt0 = self.opt_init(init_lora)
+            self._stacked_opt = jax.tree.map(
+                lambda x: jnp.repeat(jnp.asarray(x)[None], C, axis=0), opt0
+            )
+            self._stacked_mask = None  # built in init_phase when sparse_update
+            for ci, client in enumerate(self.clients):
+                client._lora_view = (
+                    lambda ci=ci: jax.tree.map(lambda x: x[ci], self._stacked_lora)
+                )
+
         self.gal_layers: Optional[np.ndarray] = None  # bool (L_logical,)
         self._gal_mask_tree = None
-        self._jit_cache: Dict[str, Any] = {}
+        self._gal_bytes_cache: Optional[int] = None
 
         # bytes accounting (paper §5.6): LoRA params up+down per round
         self.comm_bytes_per_round: List[int] = []
 
     # ------------------------------------------------------------------
-    # jitted primitives
+    # jitted primitives (loop engine + shared)
     # ------------------------------------------------------------------
 
     def _grad_step(self):
-        if "grad_step" not in self._jit_cache:
+        loss_fn, opt_update = self.loss_fn, self.opt_update
 
+        def build():
             def step(params, lora, opt_state, batch, lr, mask):
                 loss, grads = jax.value_and_grad(
-                    lambda lo: self.loss_fn(params, lo, batch)
+                    lambda lo: loss_fn(params, lo, batch)
                 )(lora)
-                new_lora, new_opt = self.opt_update(grads, opt_state, lora, lr, mask)
+                new_lora, new_opt = opt_update(grads, opt_state, lora, lr, mask)
                 return loss, new_lora, new_opt
 
-            self._jit_cache["grad_step"] = jax.jit(step)
-        return self._jit_cache["grad_step"]
+            return jax.jit(step)
+
+        return _memo(("grad_step", loss_fn, self.optimizer_name), build)
 
     def _sample_scores(self):
-        if "sample_scores" not in self._jit_cache:
-            self._jit_cache["sample_scores"] = jax.jit(
+        loss_fn = self.loss_fn
+        return _memo(
+            ("sample_scores", loss_fn),
+            lambda: jax.jit(
                 lambda params, lora, batch: fish.per_sample_fisher_scores(
-                    self.loss_fn, params, lora, batch
+                    loss_fn, params, lora, batch
                 )
-            )
-        return self._jit_cache["sample_scores"]
+            ),
+        )
 
     def _fim_diag(self):
-        if "fim_diag" not in self._jit_cache:
-            self._jit_cache["fim_diag"] = jax.jit(
-                lambda params, lora, batch: fish.fim_diag(
-                    self.loss_fn, params, lora, batch
-                )
-            )
-        return self._jit_cache["fim_diag"]
+        loss_fn = self.loss_fn
+        return _memo(
+            ("fim_diag", loss_fn),
+            lambda: jax.jit(
+                lambda params, lora, batch: fish.fim_diag(loss_fn, params, lora, batch)
+            ),
+        )
 
     def _batch_loss(self):
-        if "batch_loss" not in self._jit_cache:
-            self._jit_cache["batch_loss"] = jax.jit(self.loss_fn)
-        return self._jit_cache["batch_loss"]
+        return _memo(("batch_loss", self.loss_fn), lambda: jax.jit(self.loss_fn))
+
+    def _sensitivity_fn(self):
+        """Jitted layer-sensitivity probe (Eq. 9-10); shared by both engines."""
+        cfg, fl, probe = self.cfg, self.fl, self.model.forward_probe
+        logits_loss = make_logits_loss(cfg)
+
+        def build():
+            def fn(params, lora, batch):
+                B, T = batch["tokens"].shape
+                S = T + (cfg.num_prefix_embeddings if cfg.family == "vlm" else 0)
+                return galmod.layer_sensitivity_scores(
+                    probe,
+                    logits_loss,
+                    params,
+                    lora,
+                    batch,
+                    gamma=fl.noise_budget,
+                    p=fl.norm_p,
+                    noise_shape=(B, S, cfg.d_model),
+                )
+
+            return jax.jit(fn)
+
+        return _memo(("sensitivity", probe, fl.noise_budget, fl.norm_p), build)
+
+    # vectorized-engine programs -----------------------------------------
+
+    def _difficulty_fn(self):
+        loss_fn, metric = self.loss_fn, self.difficulty_metric
+        return _memo(
+            ("difficulty", loss_fn, metric),
+            lambda: eng.build_difficulty_fn(loss_fn, metric),
+        )
+
+    def _fim_warmup_fn(self):
+        loss_fn, momentum = self.loss_fn, self.fl.fim_momentum
+        return _memo(
+            ("fim_warmup", loss_fn, momentum),
+            lambda: eng.build_fim_warmup_fn(loss_fn, momentum),
+        )
+
+    def _round_fn(self):
+        loss_fn, opt_update = self.loss_fn, self.opt_update
+        use_mask = self._stacked_mask is not None
+        return _memo(
+            ("round", loss_fn, self.optimizer_name, use_mask),
+            lambda: eng.build_round_fn(loss_fn, opt_update, use_neuron_mask=use_mask),
+        )
 
     # ------------------------------------------------------------------
     # initialization phase (Alg. 1 lines 1-10)
@@ -158,8 +295,24 @@ class FibecFed:
     def _client_batch(self, client: ClientState, batch_ids: np.ndarray):
         return gather_batch(client.data, batch_ids)
 
+    def _host_batch_difficulty(self, client: ClientState) -> np.ndarray:
+        """length/random difficulty metrics — host-only, shared by engines
+        (identical RNG consumption order keeps the engines equivalent)."""
+        metric = self.difficulty_metric
+        scores = np.zeros(len(client.batches))
+        for j, ids in enumerate(client.batches):
+            if metric == "length":  # Shortformer/SLW-style static heuristic
+                scores[j] = float(np.sum(client.data["tokens"][ids] != 0))
+            elif metric == "random":
+                scores[j] = self.rng.random()
+            else:
+                raise ValueError(metric)
+        return scores
+
     def _batch_difficulty(self, client: ClientState) -> np.ndarray:
         metric = self.difficulty_metric
+        if metric in ("length", "random"):
+            return self._host_batch_difficulty(client)
         scores = np.zeros(len(client.batches))
         for j, ids in enumerate(client.batches):
             batch = self._client_batch(client, ids)
@@ -168,37 +321,102 @@ class FibecFed:
                 scores[j] = float(jnp.sum(s))  # Formula 17
             elif metric == "loss":  # SE/inference-loss heuristic baseline
                 scores[j] = float(self._batch_loss()(self.params, client.lora, batch))
-            elif metric == "length":  # Shortformer/SLW-style static heuristic
-                scores[j] = float(np.sum(batch["tokens"] != 0))
-            elif metric == "random":
-                scores[j] = self.rng.random()
             else:
                 raise ValueError(metric)
         return scores
 
-    def init_phase(self, *, probe_batches: int = 1) -> None:
-        fl = self.fl
-        logits_loss = make_logits_loss(self.cfg)
-        layer_scores_all, fractions, ns = [], [], []
-        for ci, client in enumerate(self.clients):
-            # --- curriculum difficulty (lines 2-5) ---
+    def _compute_difficulty(self) -> None:
+        """Lines 2-5: per-batch difficulty + ascending curriculum order."""
+        metric = self.difficulty_metric
+        if self.engine == "vectorized" and metric in ("fisher", "loss"):
+            # one program over every (client, batch) cell, each client scored
+            # with its own LoRA (matters on re-init after training rounds)
+            scores = np.asarray(
+                self._difficulty_fn()(
+                    self.params, self._stacked_lora, self._stack_data,
+                    self._sample_valid,
+                )
+            )
+            for ci, client in enumerate(self.clients):
+                client.difficulty = scores[ci, : len(client.batches)]
+                client.order = curr.order_batches(
+                    client.difficulty, self.schedule.strategy
+                )
+            return
+        for client in self.clients:
             client.difficulty = self._batch_difficulty(client)
             client.order = curr.order_batches(client.difficulty, self.schedule.strategy)
 
-            # --- layer sensitivity scores (Eq. 9-10) ---
+    def _select_local_masks(self) -> None:
+        """Lines 8-10: momentum-FIM warmup → per-client neuron keep-masks."""
+        fl = self.fl
+        if self.engine == "vectorized":
+            C = len(self.clients)
+            warm_idx = np.stack(
+                [
+                    [
+                        int(c.order[min(e, len(c.order) - 1)])
+                        for e in range(fl.fim_warmup_epochs)
+                    ]
+                    for c in self.clients
+                ]
+            )
+            rows = jnp.arange(C)[:, None]
+            cols = jnp.asarray(warm_idx)
+            wdata = {k: v[rows, cols] for k, v in self._stack_data.items()}
+            wsv = self._sample_valid[rows, cols]
+            fims = self._fim_warmup_fn()(self.params, self._stacked_lora, wdata, wsv)
+            importance = sparsemod.neuron_importance(fims)  # leaves (C, L, d_out)
+            if fl.sparse_ratio is not None:
+                keep = sparsemod.select_neuron_masks(importance, fl.sparse_ratio)
+                self._stacked_mask = jax.vmap(
+                    lambda kp: neuron_mask_tree(self.cfg, self._init_lora, kp)
+                )(keep)
+            else:  # per-client lossless ρ: build masks client by client
+                per_client = []
+                for ci, client in enumerate(self.clients):
+                    imp_ci = jax.tree.map(lambda x: x[ci], importance)
+                    keep = sparsemod.select_neuron_masks(
+                        imp_ci, client.lossless_fraction
+                    )
+                    per_client.append(neuron_mask_tree(self.cfg, self._init_lora, keep))
+                self._stacked_mask = jax.tree.map(
+                    lambda *xs: jnp.stack(xs), *per_client
+                )
+            for ci, client in enumerate(self.clients):
+                client.fim = jax.tree.map(lambda x: x[ci], fims)
+                client.neuron_mask = jax.tree.map(lambda x: x[ci], self._stacked_mask)
+            return
+        for ci, client in enumerate(self.clients):
+            fim = None
+            for e in range(fl.fim_warmup_epochs):
+                ids = client.batches[int(client.order[min(e, len(client.order) - 1)])]
+                batch = self._client_batch(client, ids)
+                new = self._fim_diag()(self.params, client.lora, batch)
+                fim = fish.fim_momentum_update(fim, new, fl.fim_momentum)
+            client.fim = fim
+            importance = sparsemod.neuron_importance(fim)
+            rho = (
+                fl.sparse_ratio
+                if fl.sparse_ratio is not None
+                else client.lossless_fraction
+            )
+            keep = sparsemod.select_neuron_masks(importance, rho)
+            client.neuron_mask = neuron_mask_tree(self.cfg, client.lora, keep)
+
+    def init_phase(self, *, probe_batches: int = 1) -> None:
+        fl = self.fl
+
+        # --- curriculum difficulty (lines 2-5) ---
+        self._compute_difficulty()
+
+        # --- layer sensitivity scores (Eq. 9-10) + lossless fractions ---
+        sensitivity = self._sensitivity_fn()
+        layer_scores_all, fractions, ns = [], [], []
+        for ci, client in enumerate(self.clients):
             ids = client.batches[int(client.order[0])]
             batch = self._client_batch(client, ids)
-            noise_shape = self._noise_shape(batch)
-            scores = galmod.layer_sensitivity_scores(
-                self.model.forward_probe,
-                logits_loss,
-                self.params,
-                client.lora,
-                batch,
-                gamma=fl.noise_budget,
-                p=fl.norm_p,
-                noise_shape=noise_shape,
-            )
+            scores = sensitivity(self.params, client.lora, batch)
             client.layer_scores = np.asarray(scores)
             layer_scores_all.append(client.layer_scores)
             ns.append(client.n)
@@ -223,30 +441,11 @@ class FibecFed:
         n_star = galmod.gal_layer_count(fractions, ns, L, fl.mu_global_local)
         self.gal_layers = self._select_layers(global_scores, n_star)
         self._gal_mask_tree = gal_mask_tree(self.cfg, self.global_lora, self.gal_layers)
+        self._gal_bytes_cache = None
 
         # --- local update parameter selection (lines 8-10) ---
         if self.sparse_update:
-            for ci, client in enumerate(self.clients):
-                fim = None
-                for e in range(fl.fim_warmup_epochs):
-                    ids = client.batches[int(client.order[min(e, len(client.order) - 1)])]
-                    batch = self._client_batch(client, ids)
-                    new = self._fim_diag()(self.params, client.lora, batch)
-                    fim = fish.fim_momentum_update(fim, new, fl.fim_momentum)
-                client.fim = fim
-                importance = sparsemod.neuron_importance(fim)
-                rho = (
-                    fl.sparse_ratio
-                    if fl.sparse_ratio is not None
-                    else client.lossless_fraction
-                )
-                keep = sparsemod.select_neuron_masks(importance, rho)
-                client.neuron_mask = neuron_mask_tree(self.cfg, client.lora, keep)
-
-    def _noise_shape(self, batch) -> tuple:
-        B, T = batch["tokens"].shape
-        S = T + (self.cfg.num_prefix_embeddings if self.cfg.family == "vlm" else 0)
-        return (B, S, self.cfg.d_model)
+            self._select_local_masks()
 
     def _select_layers(self, global_scores: np.ndarray, n_star: int) -> np.ndarray:
         L = len(global_scores)
@@ -277,7 +476,27 @@ class FibecFed:
             lambda g, l, mm: mm * g + (1.0 - mm) * l, self.global_lora, client.lora, m
         )
 
+    def _gal_bytes(self, k: int) -> int:
+        """comm accounting: GAL LoRA up+down per participating device.
+
+        The mask is fixed after init_phase; sum it once, not every round
+        (each ``float()`` is a device sync on the round's critical path).
+        """
+        if self._gal_bytes_cache is None:
+            self._gal_bytes_cache = int(
+                sum(
+                    float(jnp.sum(mm)) * 4  # f32
+                    for mm in jax.tree.leaves(self._gal_mask_tree)
+                )
+            )
+        return 2 * k * self._gal_bytes_cache
+
     def run_round(self, t: int, lr: Optional[float] = None) -> Dict[str, float]:
+        if self.engine == "vectorized":
+            return self._run_round_vectorized(t, lr)
+        return self._run_round_loop(t, lr)
+
+    def _run_round_loop(self, t: int, lr: Optional[float] = None) -> Dict[str, float]:
         fl = self.fl
         lr = fl.learning_rate if lr is None else lr
         k = min(fl.devices_per_round, len(self.clients))
@@ -312,17 +531,57 @@ class FibecFed:
 
         self.global_lora = jax.tree.map(agg, self.global_lora, m, *updates)
 
-        # comm accounting: GAL LoRA up+down per participating device
-        gal_bytes = int(
-            sum(
-                float(jnp.sum(mm)) * 4  # f32
-                for mm in jax.tree.leaves(m)
-            )
-        )
-        self.comm_bytes_per_round.append(2 * k * gal_bytes)
+        self.comm_bytes_per_round.append(self._gal_bytes(k))
         return {
             "loss": float(np.mean(losses)) if losses else float("nan"),
             "selected_batches": float(len(sel)),
+            "comm_bytes": float(self.comm_bytes_per_round[-1]),
+        }
+
+    def _run_round_vectorized(
+        self, t: int, lr: Optional[float] = None
+    ) -> Dict[str, float]:
+        fl = self.fl
+        lr = fl.learning_rate if lr is None else lr
+        k = min(fl.devices_per_round, len(self.clients))
+        chosen = self.rng.choice(len(self.clients), k, replace=False)
+        orders = [self.clients[ci].order for ci in chosen]
+        batch_idx, step_valid = curr.step_plan(
+            self.schedule, t, orders, fl.local_epochs
+        )
+        w = np.asarray([self.clients[ci].n for ci in chosen], np.float64)
+        w = (w / w.sum()).astype(np.float32)
+
+        round_fn = self._round_fn()
+        mask_arg = (
+            self._stacked_mask if self._stacked_mask is not None else jnp.zeros(())
+        )
+        self.global_lora, self._stacked_lora, self._stacked_opt, losses = round_fn(
+            self.params,
+            self.global_lora,
+            self._stacked_lora,
+            self._stacked_opt,
+            mask_arg,
+            self._gal_mask_tree,
+            self._stack_data,
+            self._sample_valid,
+            jnp.asarray(chosen, jnp.int32),
+            jnp.asarray(batch_idx),
+            jnp.asarray(step_valid),
+            jnp.asarray(w),
+            jnp.float32(lr),
+        )
+
+        losses = np.asarray(losses)  # (S, k)
+        valid = step_valid.T
+        mean_loss = float(np.sum(losses * valid) / max(np.sum(valid), 1.0))
+
+        self.comm_bytes_per_round.append(self._gal_bytes(k))
+        return {
+            "loss": mean_loss,
+            "selected_batches": float(
+                len(curr.selected_batch_ids(self.schedule, t, orders[-1]))
+            ),
             "comm_bytes": float(self.comm_bytes_per_round[-1]),
         }
 
@@ -332,16 +591,18 @@ class FibecFed:
 
     def evaluate(self, data: Dict[str, np.ndarray], batch_size: int = 32) -> float:
         """Accuracy with the *server* model (GAL part global, rest zeros)."""
-        if "eval" not in self._jit_cache:
+        forward, family = self.model.forward, self.cfg.family
 
+        def build():
             def predict(params, lora, batch):
-                logits, _ = self.model.forward(params, lora, batch)
-                if self.cfg.family == "encoder":
+                logits, _ = forward(params, lora, batch)
+                if family == "encoder":
                     return jnp.argmax(logits, -1)
                 return jnp.argmax(logits[:, -1], -1)
 
-            self._jit_cache["eval"] = jax.jit(predict)
-        predict = self._jit_cache["eval"]
+            return jax.jit(predict)
+
+        predict = _memo(("eval", forward), build)
         n = len(next(iter(data.values())))
         correct, total = 0, 0
         for i in range(0, n, batch_size):

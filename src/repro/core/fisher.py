@@ -47,24 +47,30 @@ def per_sample_fisher_scores(
 
 
 def batch_fisher_scores(
-    loss_fn, params, lora, batches
+    loss_fn, params, lora, batches, sample_mask=None
 ) -> jax.Array:
     """Difficulty score per *batch* (Formula 17): sum of member scores.
 
-    batches: pytree with leading (n_batches, batch_size) axes.
+    batches: pytree with leading (n_batches, batch_size) axes. ``sample_mask``
+    (n_batches, batch_size) zeroes out padding samples so fixed-shape padded
+    batches score identically to their ragged originals.
     """
 
-    def one_batch(b):
-        return jnp.sum(per_sample_fisher_scores(loss_fn, params, lora, b))
+    def one_batch(b, m):
+        s = per_sample_fisher_scores(loss_fn, params, lora, b)
+        return jnp.sum(s if m is None else s * m)
 
-    return jax.lax.map(one_batch, batches)
+    if sample_mask is None:
+        return jax.lax.map(lambda b: one_batch(b, None), batches)
+    return jax.lax.map(lambda bm: one_batch(*bm), (batches, sample_mask))
 
 
-def fim_diag(loss_fn, params, lora, batch) -> Any:
+def fim_diag(loss_fn, params, lora, batch, sample_mask=None) -> Any:
     """Empirical average diagonal FIM F̃_k over a batch (per-leaf tree).
 
     Per-sample squared grads averaged over the batch — NOT the square of the
     averaged gradient (Kunstner et al. 2019 distinction the paper relies on).
+    ``sample_mask`` (batch_size,) restricts the average to valid samples.
     """
 
     def one(sample):
@@ -73,8 +79,14 @@ def fim_diag(loss_fn, params, lora, batch) -> Any:
 
     expanded = jax.tree.map(lambda x: x[:, None], batch)
     sq = jax.vmap(one)(expanded)
-    n = jax.tree.leaves(batch)[0].shape[0]
-    return jax.tree.map(lambda x: jnp.sum(x, axis=0) / n, sq)
+    if sample_mask is None:
+        n = jax.tree.leaves(batch)[0].shape[0]
+        return jax.tree.map(lambda x: jnp.sum(x, axis=0) / n, sq)
+    m = sample_mask.astype(jnp.float32)
+    n = jnp.maximum(jnp.sum(m), 1.0)
+    return jax.tree.map(
+        lambda x: jnp.sum(x * m.reshape((-1,) + (1,) * (x.ndim - 1)), axis=0) / n, sq
+    )
 
 
 def fim_momentum_update(fim_prev, fim_new, momentum: float):

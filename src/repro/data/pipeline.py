@@ -1,7 +1,17 @@
-"""Host-side batching utilities for the FL simulation and examples."""
+"""Host-side batching utilities for the FL simulation and examples.
+
+Besides the per-batch index helpers used by the legacy loop engine, this
+module builds the *padded fixed-shape* client stacks consumed by the
+vectorized round engine: every client's dataset is cut into ``batch_size``
+batches, padded to a common ``(n_batches_max, batch_size)`` grid, and stacked
+along a leading client axis so one ``vmap``/``scan`` program covers the whole
+cohort. Padding slots point at sample 0 and carry a zero ``sample_valid``
+mask, so masked reductions reproduce the ragged originals exactly.
+"""
 from __future__ import annotations
 
-from typing import Dict, Iterator, List
+import dataclasses
+from typing import Dict, Iterator, List, Sequence
 
 import numpy as np
 
@@ -17,6 +27,77 @@ def make_batches(n: int, batch_size: int, *, drop_remainder: bool = False) -> Li
 
 def gather_batch(data: Dict[str, np.ndarray], idx: np.ndarray) -> Dict[str, np.ndarray]:
     return {k: v[idx] for k, v in data.items()}
+
+
+def pad_batches(batches: List[np.ndarray], batch_size: int) -> tuple:
+    """(n_batches, batch_size) sample ids + f32 valid mask for one client.
+
+    Ragged final batches are padded with sample id 0; the mask zeroes the
+    padding out of every downstream reduction.
+    """
+    nb = max(1, len(batches))
+    ids = np.zeros((nb, batch_size), np.int32)
+    valid = np.zeros((nb, batch_size), np.float32)
+    for j, b in enumerate(batches):
+        ids[j, : len(b)] = b
+        valid[j, : len(b)] = 1.0
+    return ids, valid
+
+
+@dataclasses.dataclass
+class ClientStack:
+    """All clients' data on one padded (C, NB, B, ...) grid.
+
+    ``data`` holds the gathered feature arrays; ``sample_valid`` is the f32
+    validity mask; ``n_batches``/``n_samples`` are the host-side true sizes
+    (padding batches beyond ``n_batches[c]`` are entirely invalid).
+    """
+
+    data: Dict[str, np.ndarray]
+    sample_valid: np.ndarray  # (C, NB, B) f32
+    n_batches: np.ndarray  # (C,) int
+    n_samples: np.ndarray  # (C,) int
+
+    @property
+    def num_clients(self) -> int:
+        return len(self.n_batches)
+
+    @property
+    def max_batches(self) -> int:
+        return self.sample_valid.shape[1]
+
+
+def stack_clients(
+    client_data: Sequence[Dict[str, np.ndarray]], batch_size: int
+) -> ClientStack:
+    """Build the padded fixed-shape stack the vectorized engine trains on."""
+    per_client = []
+    for cd in client_data:
+        n = len(next(iter(cd.values())))
+        ids, valid = pad_batches(make_batches(n, batch_size), batch_size)
+        per_client.append((cd, n, ids, valid))
+    nb_max = max(ids.shape[0] for _, _, ids, _ in per_client)
+
+    keys = list(per_client[0][0].keys())
+    data = {}
+    for k in keys:
+        stacked = []
+        for cd, _, ids, _ in per_client:
+            g = cd[k][ids.reshape(-1)].reshape(ids.shape + cd[k].shape[1:])
+            if ids.shape[0] < nb_max:
+                pad = np.repeat(g[:1], nb_max - ids.shape[0], axis=0)
+                g = np.concatenate([g, pad], axis=0)
+            stacked.append(g)
+        data[k] = np.stack(stacked)
+    valid = np.zeros((len(per_client), nb_max, batch_size), np.float32)
+    for c, (_, _, ids, v) in enumerate(per_client):
+        valid[c, : v.shape[0]] = v
+    return ClientStack(
+        data=data,
+        sample_valid=valid,
+        n_batches=np.asarray([ids.shape[0] for _, _, ids, _ in per_client]),
+        n_samples=np.asarray([n for _, n, _, _ in per_client]),
+    )
 
 
 def batch_iterator(

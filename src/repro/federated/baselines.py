@@ -50,6 +50,7 @@ def make_runner(
     *,
     seed: int = 0,
     optimizer: str = "sgd",
+    engine: str = "vectorized",
 ) -> FibecFed:
     preset = dict(BASELINES[name])
     curriculum = preset.pop("curriculum", None)
@@ -58,7 +59,8 @@ def make_runner(
 
         fl = dataclasses.replace(fl, curriculum=curriculum)
     return FibecFed(
-        model, loss_fn, fl, client_data, seed=seed, optimizer=optimizer, **preset
+        model, loss_fn, fl, client_data, seed=seed, optimizer=optimizer,
+        engine=engine, **preset
     )
 
 

@@ -43,7 +43,12 @@ _PARAM = re.compile(r"%?([\w.\-]+):\s*(?:\()?(\w+)\[([\d,]*)\]")
 _WHILE = re.compile(r"while\(.*?condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)", re.S)
 _CALLS = re.compile(r"calls=%?([\w.\-]+)")
 _TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
-_DOT_OPERANDS = re.compile(r"\bdot\(%?([\w.\-]+),\s*%?([\w.\-]+)\)")
+# operands may carry inline shapes ("dot(f32[8,8]{1,0} %a, f32[8,8]{1,0} %b)")
+# in newer XLA text dumps, or be bare names ("dot(%a, %b)") in older ones
+_SHAPE_PREFIX = r"(?:\w+\[[\d,]*\](?:\{[^}]*\})?\s+)?"
+_DOT_OPERANDS = re.compile(
+    rf"\bdot\({_SHAPE_PREFIX}%?([\w.\-]+),\s*{_SHAPE_PREFIX}%?([\w.\-]+)\)"
+)
 _DIMS = {
     "lb": re.compile(r"lhs_batch_dims=\{([\d,]*)\}"),
     "lc": re.compile(r"lhs_contracting_dims=\{([\d,]*)\}"),
@@ -222,7 +227,9 @@ def analyze_hlo(hlo: str) -> Dict[str, float]:
 
 _METADATA_NAME = re.compile(r'op_name="([^"]+)"')
 _OPCODE = re.compile(r"(?:^|\s|\))([a-z][\w\-]*)\(")
-_DUS_OPERANDS = re.compile(r"dynamic-update-slice\(%?([\w.\-]+),\s*%?([\w.\-]+)")
+_DUS_OPERANDS = re.compile(
+    rf"dynamic-update-slice\({_SHAPE_PREFIX}%?([\w.\-]+),\s*{_SHAPE_PREFIX}%?([\w.\-]+)"
+)
 
 # results that are aliases/bookkeeping, not HBM writes
 _NO_TRAFFIC = {

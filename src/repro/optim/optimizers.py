@@ -18,6 +18,24 @@ def _masked(g, mask_leaf):
     return g if mask_leaf is None else g * mask_leaf.astype(g.dtype)
 
 
+def tree_where(pred, new, old):
+    """Per-leaf ``where`` keyed on a leading-axis predicate.
+
+    ``pred`` is (k,) (or scalar) and selects, for each entry along the leaves'
+    leading axis, the updated vs. previous value. This is how the vectorized
+    FL engine no-ops padded curriculum steps inside ``lax.scan`` without
+    changing optimizer state — the scan body always computes, ``tree_where``
+    decides what sticks (including moment buffers and Adam's step counter).
+    """
+    pred = jnp.asarray(pred)
+
+    def sel(n, o):
+        p = pred.reshape(pred.shape + (1,) * (n.ndim - pred.ndim)) if n.ndim else pred
+        return jnp.where(p != 0, n, o)
+
+    return jax.tree.map(sel, new, old)
+
+
 # ---------------------------------------------------------------------------
 # SGD (+ momentum)
 # ---------------------------------------------------------------------------

@@ -1,1 +1,8 @@
-from repro.train.losses import make_loss_fn, make_label_token_loss, lm_loss, cls_loss
+from repro.train.losses import (
+    make_loss_fn,
+    make_label_token_loss,
+    lm_loss,
+    cls_loss,
+    per_sample_losses,
+    masked_mean_loss,
+)

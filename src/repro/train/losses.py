@@ -35,8 +35,28 @@ def label_token_loss(logits: jax.Array, label_tokens: jax.Array) -> jax.Array:
     return jnp.mean(_xent(logits[:, -1], label_tokens))
 
 
+# One loss_fn per model: FibecFed memoizes compiled programs by loss_fn
+# identity, so handing every runner the same function object (rather than a
+# fresh closure per call) is what lets baselines/engines share compiles.
+_LOSS_FN_CACHE: Dict[int, Callable] = {}
+
+
 def make_loss_fn(model: ModelFns) -> Callable:
-    """(params, lora, batch) -> scalar. Dispatches on family/batch contents."""
+    """(params, lora, batch) -> scalar. Dispatches on family/batch contents.
+
+    Calls with the same ``model`` return the same function object (memoized).
+    The returned function carries a ``.masked`` attribute:
+    ``masked(params, lora, batch, sample_mask)`` computes the same loss
+    restricted to the mask's valid samples with a *single* batched forward
+    (per-sample CE weighted by the mask). For every loss here the masked
+    value equals the plain loss of the corresponding ragged sub-batch, which
+    is what lets the vectorized FL engine train on padded fixed-shape
+    batches at full batched-matmul efficiency. (Caveat: the MoE aux loss is
+    computed over the padded batch, not the ragged one.)
+    """
+    cached = _LOSS_FN_CACHE.get(id(model))
+    if cached is not None:
+        return cached
     cfg = model.cfg
 
     def loss_fn(params, lora, batch: Dict[str, Any]):
@@ -48,7 +68,46 @@ def make_loss_fn(model: ModelFns) -> Callable:
         offset = cfg.num_prefix_embeddings if cfg.family == "vlm" else 0
         return lm_loss(logits, batch["tokens"], offset) + aux
 
+    def masked(params, lora, batch: Dict[str, Any], sample_mask):
+        logits, aux = model.forward(params, lora, batch)
+        m = sample_mask.astype(jnp.float32)
+        denom = jnp.maximum(jnp.sum(m), 1.0)
+        if cfg.family == "encoder":
+            per = _xent(logits, batch["labels"])
+        elif "label_token" in batch:
+            per = _xent(logits[:, -1], batch["label_token"])
+        else:
+            offset = cfg.num_prefix_embeddings if cfg.family == "vlm" else 0
+            tokens = batch["tokens"]
+            pred = logits[:, offset : offset + tokens.shape[1] - 1]
+            per = jnp.mean(_xent(pred, tokens[:, 1:]), axis=-1)
+        return jnp.sum(per * m) / denom + aux
+
+    loss_fn.masked = masked
+    # hold the model ref so id() stays unique for the cache's lifetime
+    loss_fn._model = model
+    _LOSS_FN_CACHE[id(model)] = loss_fn
     return loss_fn
+
+
+def per_sample_losses(loss_fn: Callable, params, lora, batch) -> jax.Array:
+    """(B,) per-sample losses from a mean-over-samples batch ``loss_fn``.
+
+    Evaluates the loss on singleton-batch slices under vmap. For every loss in
+    this module the batch loss equals the mean of these values (all samples in
+    a batch share one sequence length), so a mask-weighted mean reproduces the
+    loss of a ragged sub-batch exactly — the contract the vectorized FL engine
+    relies on for padded fixed-shape batches.
+    """
+    expanded = jax.tree.map(lambda x: x[:, None], batch)
+    return jax.vmap(lambda s: loss_fn(params, lora, s))(expanded)
+
+
+def masked_mean_loss(loss_fn: Callable, params, lora, batch, sample_mask) -> jax.Array:
+    """Batch loss restricted to ``sample_mask`` (B,) valid samples."""
+    per = per_sample_losses(loss_fn, params, lora, batch)
+    m = sample_mask.astype(jnp.float32)
+    return jnp.sum(per * m) / jnp.maximum(jnp.sum(m), 1.0)
 
 
 def make_label_token_loss(model: ModelFns) -> Callable:

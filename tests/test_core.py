@@ -158,6 +158,7 @@ def test_gal_layer_count():
     assert 1 <= gal_layer_count([0.0], [1], 24) <= 24
 
 
+@pytest.mark.slow  # Lanczos + Lipschitz probing: ~1 min on CPU
 def test_lossless_rank_fraction_bounds(setup, rng):
     model, params, lora, task, batch = setup
     loss_fn = make_loss_fn(model)
