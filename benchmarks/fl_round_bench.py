@@ -1,9 +1,12 @@
-"""Round-engine throughput: vectorized vs. loop, steady-state rounds/sec.
+"""Round-engine throughput: loop vs. vectorized vs. mesh-sharded rounds/sec.
 
 The vectorized engine runs one jitted device program per federated round
 (scan over curriculum steps inside a vmap over clients, fused GAL FedAvg);
 the loop engine dispatches one jitted call per (client, batch) step and
-aggregates on the host. Both are measured at the reduced qwen2-0.5b config
+aggregates on the host; the sharded engine (``--mesh``) is the vectorized
+program with the stacked client axis sharded over a data-only device mesh,
+each device training its shard of the cohort and the weighted GAL FedAvg
+lowering to an all-reduce. All are measured at the reduced qwen2-0.5b config
 in their compiled steady state (fixed late-curriculum round, so the padded
 step count — and therefore the compiled program — is stable).
 
@@ -18,16 +21,35 @@ size skew costs masked padding steps (label skew is irrelevant to
 throughput; see ROADMAP "Open items" for skew-aware bucketing).
 
 Usage:  PYTHONPATH=src python benchmarks/fl_round_bench.py [--rounds N]
+        [--mesh]            (also bench engine="sharded" on all XLA devices)
+        [--json PATH]       (machine-readable results, e.g. BENCH_fl_round.json;
+                             compare against a baseline with scripts/bench_compare.py)
         [--min-speedup X]   (non-zero exit if vectorized/loop < X)
 
 Env: REPRO_BENCH_DEVICES (default 32) clients, half sampled per round.
+     REPRO_BENCH_HOST_DEVICES forces that many XLA host devices (must be set
+     before jax initializes; equivalent to
+     XLA_FLAGS=--xla_force_host_platform_device_count=N) — the multi-device
+     CI recipe is REPRO_BENCH_HOST_DEVICES=8 + --mesh.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
 import time
+
+# must run before jax (imported transitively below) locks the device count;
+# appended so a pre-existing XLA_FLAGS keeps its other settings
+_HOST_DEVICES = os.environ.get("REPRO_BENCH_HOST_DEVICES")
+if _HOST_DEVICES and "xla_force_host_platform_device_count" not in os.environ.get(
+    "XLA_FLAGS", ""
+):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={_HOST_DEVICES}"
+    ).strip()
 
 import numpy as np
 
@@ -99,18 +121,41 @@ def bench_engine(engine: str, *, rounds: int, repeats: int = 3, seed: int = 0) -
     }
 
 
-def bench_all(rounds: int = 20) -> tuple:
-    """Returns (csv_rows, vectorized_over_loop_speedup)."""
-    results = {e: bench_engine(e, rounds=rounds) for e in ("loop", "vectorized")}
-    speedup = results["vectorized"]["rounds_per_s"] / results["loop"]["rounds_per_s"]
+def bench_all(rounds: int = 20, engines=("loop", "vectorized")) -> tuple:
+    """Returns (csv_rows, speedups dict, per-engine results dict)."""
+    results = {e: bench_engine(e, rounds=rounds) for e in engines}
+    speedups = {
+        f"{e}_over_loop": results[e]["rounds_per_s"] / results["loop"]["rounds_per_s"]
+        for e in engines
+        if e != "loop"
+    }
     rows = [
         f"fl_round/{r['engine']},{r['ms_per_round']:.1f},"
         f"rounds_per_s={r['rounds_per_s']:.2f};init_s={r['init_s']:.1f};"
         f"loss={r['final_loss']:.4f}"
         for r in results.values()
     ]
-    rows.append(f"fl_round/speedup,0.0,vectorized_over_loop={speedup:.2f}x")
-    return rows, speedup
+    for name, s in speedups.items():
+        rows.append(f"fl_round/speedup,0.0,{name}={s:.2f}x")
+    return rows, speedups, results
+
+
+def write_json(path: str, speedups: dict, results: dict) -> None:
+    """BENCH_fl_round.json — the machine-readable record scripts/
+    bench_compare.py checks against a committed baseline."""
+    import jax
+
+    payload = {
+        "bench": "fl_round",
+        "num_xla_devices": len(jax.devices()),
+        "fl_devices": DEVICES,
+        "batch_size": BATCH_SIZE,
+        "engines": results,
+        "speedups": speedups,
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
 
 
 def run() -> list:
@@ -122,13 +167,28 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--rounds", type=int, default=20, help="timed steady-state rounds")
     ap.add_argument(
+        "--mesh", action="store_true",
+        help="also bench engine='sharded' on a data mesh over all XLA devices",
+    )
+    ap.add_argument(
+        "--json", default=None, metavar="PATH",
+        help="write machine-readable results (e.g. BENCH_fl_round.json)",
+    )
+    ap.add_argument(
         "--min-speedup", type=float, default=0.0,
         help="exit non-zero unless vectorized/loop >= this",
     )
     args = ap.parse_args()
-    rows, speedup = bench_all(rounds=args.rounds)
+    engines = ("loop", "vectorized") + (("sharded",) if args.mesh else ())
+    rows, speedups, results = bench_all(rounds=args.rounds, engines=engines)
     for row in rows:
         print(row)
-    if speedup < args.min_speedup:
-        print(f"FAIL: speedup {speedup:.2f}x < {args.min_speedup:.2f}x")
+    if args.json:
+        write_json(args.json, speedups, results)
+        print(f"# wrote {args.json}", file=sys.stderr)
+    if speedups["vectorized_over_loop"] < args.min_speedup:
+        print(
+            f"FAIL: speedup {speedups['vectorized_over_loop']:.2f}x"
+            f" < {args.min_speedup:.2f}x"
+        )
         sys.exit(1)

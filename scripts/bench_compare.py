@@ -1,0 +1,124 @@
+"""Benchmark regression gate: compare a BENCH_fl_round.json to a baseline.
+
+``fl_round_bench.py --json BENCH_fl_round.json`` emits per-engine rounds/sec
+plus engine-over-loop speedup ratios; this script compares them against a
+committed baseline (``benchmarks/baselines/fl_round.json``) and fails loudly
+when anything regressed by more than ``--max-regression`` (default 30%).
+
+Absolute rounds/sec are machine-dependent, so on shared CI runners pass
+``--warn-only``: every check still runs and prints, but regressions exit 0.
+The speedup ratios are within-run relative measurements and transfer across
+machines — a ratio regression on any host is a real signal — but only
+between runs with the same XLA device count (the sharded engine's ratio is
+structurally a function of it), so runs whose ``num_xla_devices`` differs
+from the baseline's are skipped (exit 0) unless ``--allow-device-mismatch``
+forces the comparison. The committed baseline is recorded under the CI
+regime (``REPRO_BENCH_HOST_DEVICES=8``).
+
+Usage:
+  python scripts/bench_compare.py BENCH_fl_round.json \
+      [--baseline benchmarks/baselines/fl_round.json] \
+      [--max-regression 0.30] [--warn-only] [--allow-device-mismatch]
+
+Exit codes: 0 ok (or --warn-only / skipped device mismatch), 1 regression,
+2 unusable inputs.
+
+No third-party imports — safe to run before the environment installs jax.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def compare(current: dict, baseline: dict, max_regression: float) -> list:
+    """Returns [(name, current, baseline, ratio, regressed), ...]."""
+    checks = []
+    cur_e, base_e = current.get("engines", {}), baseline.get("engines", {})
+    for engine in sorted(set(cur_e) & set(base_e)):
+        c, b = cur_e[engine]["rounds_per_s"], base_e[engine]["rounds_per_s"]
+        ratio = c / b if b else float("inf")
+        checks.append((f"rounds_per_s/{engine}", c, b, ratio))
+    cur_s, base_s = current.get("speedups", {}), baseline.get("speedups", {})
+    for name in sorted(set(cur_s) & set(base_s)):
+        ratio = cur_s[name] / base_s[name] if base_s[name] else float("inf")
+        checks.append((f"speedup/{name}", cur_s[name], base_s[name], ratio))
+    return [
+        (name, c, b, ratio, ratio < 1.0 - max_regression)
+        for name, c, b, ratio in checks
+    ]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current", help="fresh BENCH_fl_round.json")
+    ap.add_argument(
+        "--baseline", default="benchmarks/baselines/fl_round.json",
+        help="committed reference JSON",
+    )
+    ap.add_argument(
+        "--max-regression", type=float, default=0.30,
+        help="tolerated fractional slowdown before failing (0.30 = 30%%)",
+    )
+    ap.add_argument(
+        "--warn-only", action="store_true",
+        help="print regressions but exit 0 (shared/noisy runners)",
+    )
+    ap.add_argument(
+        "--allow-device-mismatch", action="store_true",
+        help="compare even when num_xla_devices differs from the baseline",
+    )
+    args = ap.parse_args(argv)
+
+    try:
+        with open(args.current) as f:
+            current = json.load(f)
+        with open(args.baseline) as f:
+            baseline = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"bench_compare: cannot load inputs: {e}", file=sys.stderr)
+        return 2
+
+    cur_dev = current.get("num_xla_devices")
+    base_dev = baseline.get("num_xla_devices")
+    if cur_dev is None or base_dev is None:
+        # a benign "skipped" here would disable the gate forever — refuse
+        print(
+            "bench_compare: num_xla_devices missing from "
+            + ("current" if cur_dev is None else "baseline")
+            + " JSON — not a fl_round_bench --json output?",
+            file=sys.stderr,
+        )
+        return 2
+    if cur_dev != base_dev and not args.allow_device_mismatch:
+        print(
+            f"bench_compare: skipped — run has {cur_dev} XLA devices, baseline"
+            f" {base_dev}; throughput and speedup ratios are not comparable"
+            " across device counts (--allow-device-mismatch to force)"
+        )
+        return 0
+
+    checks = compare(current, baseline, args.max_regression)
+    if not checks:
+        print("bench_compare: no overlapping metrics between current and baseline",
+              file=sys.stderr)
+        return 2
+
+    regressed = False
+    for name, c, b, ratio, bad in checks:
+        status = "REGRESSION" if bad else "ok"
+        print(f"{status:10s} {name}: {c:.3f} vs baseline {b:.3f} (x{ratio:.2f})")
+        regressed |= bad
+    if regressed:
+        print(
+            f"bench_compare: regression > {args.max_regression:.0%} vs"
+            f" {args.baseline}" + (" [warn-only]" if args.warn_only else "")
+        )
+        return 0 if args.warn_only else 1
+    print("bench_compare: all metrics within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -22,6 +22,17 @@ stacked buffers, so steady-state rounds allocate nothing persistent.
 The initialization phase gets the same treatment: difficulty scoring runs as
 one vmapped program over every (client, batch) cell, and the momentum-FIM
 warmup is a scan over warmup epochs of a vmap over clients.
+
+Mesh sharding (``engine="sharded"``): the leading client axis is the data-
+parallel axis of a device mesh. ``build_sharded_round_fn`` jits the *same*
+round body with the stacked client state, data grid, and gathered cohort
+sharded over the mesh's client axes (``launch.mesh.dp_axes``), base params
+and the global GAL LoRA replicated, and the fused weighted FedAvg lowering
+to an all-reduce (psum) over the client axis — the paper's server
+aggregation as a collective. Client counts must be padded to a multiple of
+the mesh's client-group count (``stack_clients(pad_clients_to=...)``); the
+runner also pads the chosen cohort with dedicated padding rows (zero weight,
+zero valid steps) so gather/scatter never write one row twice.
 """
 from __future__ import annotations
 
@@ -29,8 +40,10 @@ from typing import Any, Callable, Dict
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import fisher as fish
+from repro.launch.mesh import dp_axes
 from repro.optim.optimizers import tree_where
 from repro.train.losses import masked_mean_loss
 
@@ -41,6 +54,15 @@ def _gather(tree, idx):
 
 def _scatter(tree, idx, values):
     return jax.tree.map(lambda s, c: s.at[idx].set(c), tree, values)
+
+
+def client_sharding(mesh) -> NamedSharding:
+    """Stacked client trees: leading client axis over the mesh's dp axes."""
+    return NamedSharding(mesh, P(dp_axes(mesh)))
+
+
+def replicated_sharding(mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
 
 
 def _masked_loss(loss_fn: Callable) -> Callable:
@@ -55,20 +77,21 @@ def _masked_loss(loss_fn: Callable) -> Callable:
     )
 
 
-def build_round_fn(
-    loss_fn: Callable, opt_update: Callable, *, use_neuron_mask: bool
+def _round_body(
+    loss_fn: Callable,
+    opt_update: Callable,
+    *,
+    use_neuron_mask: bool,
+    shard: Callable = lambda t: t,
+    hoist_client_data: bool = False,
 ) -> Callable:
-    """Jitted full-round program.
+    """The round program shared by the single-device and sharded engines.
 
-    Signature (leading client axis C on stacked trees, k chosen clients,
-    S padded steps, NB padded batches of size B):
-
-    ``round_fn(params, global_lora, stacked_lora, stacked_opt, neuron_mask,
-    gal_mask, data, sample_valid, chosen, batch_idx, step_valid, weights, lr)
-    -> (new_global_lora, new_stacked_lora, new_stacked_opt, losses (S, k))``
-
-    ``neuron_mask`` is ignored (pass anything hashable-shaped, e.g. the
-    stacked LoRA) when ``use_neuron_mask`` is False.
+    ``shard`` constrains gathered per-cohort trees (leading k axis) onto the
+    mesh's client axes; identity on one device. ``hoist_client_data`` gathers
+    the chosen clients' data grid once before the step scan (so the sharded
+    engine pays one collective gather per round, not one per step) — the
+    per-step batch values are identical either way.
     """
 
     def round_fn(
@@ -86,9 +109,12 @@ def build_round_fn(
         weights,
         lr,
     ):
-        cl_lora = _gather(stacked_lora, chosen)
-        cl_opt = _gather(stacked_opt, chosen)
-        cl_mask = _gather(neuron_mask, chosen) if use_neuron_mask else None
+        cl_lora = shard(_gather(stacked_lora, chosen))
+        cl_opt = shard(_gather(stacked_opt, chosen))
+        cl_mask = shard(_gather(neuron_mask, chosen)) if use_neuron_mask else None
+        if hoist_client_data:
+            cl_data = shard({kk: v[chosen] for kk, v in data.items()})
+            cl_sv = shard(sample_valid[chosen])
 
         # line 15: overwrite the GAL part of each client's LoRA with the
         # global copy; gal_mask leaves broadcast over the client axis.
@@ -108,8 +134,16 @@ def build_round_fn(
         def step(carry, xs):
             lora_c, opt_c = carry
             bidx, active = xs  # (k,), (k,)
-            batch = {kk: v[chosen, bidx] for kk, v in data.items()}
-            sv = sample_valid[chosen, bidx]
+            if hoist_client_data:
+                # per-client batch pick stays aligned on the k axis (no
+                # cross-device gather inside the scan)
+                batch = shard(
+                    {kk: jax.vmap(lambda d, j: d[j])(v, bidx) for kk, v in cl_data.items()}
+                )
+                sv = shard(jax.vmap(lambda d, j: d[j])(cl_sv, bidx))
+            else:
+                batch = {kk: v[chosen, bidx] for kk, v in data.items()}
+                sv = sample_valid[chosen, bidx]
             if use_neuron_mask:
                 loss, new_lora, new_opt = jax.vmap(one_step)(
                     lora_c, opt_c, cl_mask, batch, sv
@@ -128,7 +162,8 @@ def build_round_fn(
             step, (cl_lora, cl_opt), (batch_idx.T, step_valid.T)
         )
 
-        # line 18: weighted FedAvg fused over the GAL part only
+        # line 18: weighted FedAvg fused over the GAL part only; with the k
+        # axis sharded this contraction IS the server all-reduce (psum)
         agg = jax.tree.map(lambda x: jnp.tensordot(weights, x, axes=1), cl_lora)
         new_global = jax.tree.map(
             lambda g, m, a: m * a + (1.0 - m) * g, global_lora, gal_mask, agg
@@ -141,16 +176,71 @@ def build_round_fn(
             losses,
         )
 
-    return jax.jit(round_fn, donate_argnums=(1, 2, 3))
+    return round_fn
 
 
-def build_difficulty_fn(loss_fn: Callable, metric: str) -> Callable:
-    """Jitted (C, NB) difficulty scorer over the padded client stack.
+def build_round_fn(
+    loss_fn: Callable, opt_update: Callable, *, use_neuron_mask: bool
+) -> Callable:
+    """Jitted full-round program.
 
-    ``metric`` is "fisher" (Formula 17, via :func:`fisher.batch_fisher_scores`)
-    or "loss" (masked mean inference loss). Host-side metrics (length, random)
-    never hit the device and stay in the orchestrator.
+    Signature (leading client axis C on stacked trees, k chosen clients,
+    S padded steps, NB padded batches of size B):
+
+    ``round_fn(params, global_lora, stacked_lora, stacked_opt, neuron_mask,
+    gal_mask, data, sample_valid, chosen, batch_idx, step_valid, weights, lr)
+    -> (new_global_lora, new_stacked_lora, new_stacked_opt, losses (S, k))``
+
+    ``neuron_mask`` is ignored (pass anything hashable-shaped, e.g. the
+    stacked LoRA) when ``use_neuron_mask`` is False.
     """
+    body = _round_body(loss_fn, opt_update, use_neuron_mask=use_neuron_mask)
+    return jax.jit(body, donate_argnums=(1, 2, 3))
+
+
+def build_sharded_round_fn(
+    loss_fn: Callable, opt_update: Callable, *, use_neuron_mask: bool, mesh
+) -> Callable:
+    """The round program of :func:`build_round_fn`, sharded over ``mesh``.
+
+    The stacked client state, padded data grid, and the gathered cohort carry
+    their leading client axis on the mesh's dp axes; params / global LoRA /
+    the GAL mask / the step plan are replicated. Requires the stack's client
+    count C and the padded cohort size k to be multiples of
+    ``launch.mesh.num_client_groups(mesh)`` (the runner pads both).
+    """
+    client = client_sharding(mesh)
+    repl = replicated_sharding(mesh)
+    body = _round_body(
+        loss_fn,
+        opt_update,
+        use_neuron_mask=use_neuron_mask,
+        shard=lambda t: jax.lax.with_sharding_constraint(t, client),
+        hoist_client_data=True,
+    )
+    return jax.jit(
+        body,
+        in_shardings=(
+            repl,  # params
+            repl,  # global_lora
+            client,  # stacked_lora
+            client,  # stacked_opt
+            client if use_neuron_mask else repl,  # neuron_mask
+            repl,  # gal_mask
+            client,  # data
+            client,  # sample_valid
+            repl,  # chosen
+            repl,  # batch_idx
+            repl,  # step_valid
+            repl,  # weights
+            repl,  # lr
+        ),
+        out_shardings=(repl, client, client, repl),
+        donate_argnums=(1, 2, 3),
+    )
+
+
+def _difficulty_body(loss_fn: Callable, metric: str) -> Callable:
     if metric == "fisher":
 
         def per_client(params, lora, cdata, csv):
@@ -175,19 +265,32 @@ def build_difficulty_fn(loss_fn: Callable, metric: str) -> Callable:
             stacked_lora, data, sample_valid
         )
 
-    return jax.jit(diff)
+    return diff
 
 
-def build_fim_warmup_fn(loss_fn: Callable, momentum: float) -> Callable:
-    """Jitted momentum-FIM warmup over all clients at once.
+def build_difficulty_fn(loss_fn: Callable, metric: str) -> Callable:
+    """Jitted (C, NB) difficulty scorer over the padded client stack.
 
-    ``warm(params, stacked_lora, wdata, wsv)`` with warmup batches stacked to
-    ``(C, E, B, ...)`` returns the per-client momentum diag-FIM trees stacked
-    to ``(C, ...)`` — a scan over the E warmup epochs of a vmap over clients,
-    replaying ``fim_momentum_update`` (first epoch initializes, later epochs
-    blend with momentum).
+    ``metric`` is "fisher" (Formula 17, via :func:`fisher.batch_fisher_scores`)
+    or "loss" (masked mean inference loss). Host-side metrics (length, random)
+    never hit the device and stay in the orchestrator.
     """
+    return jax.jit(_difficulty_body(loss_fn, metric))
 
+
+def build_sharded_difficulty_fn(loss_fn: Callable, metric: str, mesh) -> Callable:
+    """Difficulty scorer with each device scoring its shard of clients; the
+    (C, NB) score grid is replicated on return (the host sorts it anyway)."""
+    client = client_sharding(mesh)
+    repl = replicated_sharding(mesh)
+    return jax.jit(
+        _difficulty_body(loss_fn, metric),
+        in_shardings=(repl, client, client, client),
+        out_shardings=repl,
+    )
+
+
+def _fim_warmup_body(loss_fn: Callable, momentum: float) -> Callable:
     def per_client(params, lora, cdata, csv):
         zero = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), lora)
 
@@ -210,4 +313,28 @@ def build_fim_warmup_fn(loss_fn: Callable, momentum: float) -> Callable:
             stacked_lora, wdata, wsv
         )
 
-    return jax.jit(warm)
+    return warm
+
+
+def build_fim_warmup_fn(loss_fn: Callable, momentum: float) -> Callable:
+    """Jitted momentum-FIM warmup over all clients at once.
+
+    ``warm(params, stacked_lora, wdata, wsv)`` with warmup batches stacked to
+    ``(C, E, B, ...)`` returns the per-client momentum diag-FIM trees stacked
+    to ``(C, ...)`` — a scan over the E warmup epochs of a vmap over clients,
+    replaying ``fim_momentum_update`` (first epoch initializes, later epochs
+    blend with momentum).
+    """
+    return jax.jit(_fim_warmup_body(loss_fn, momentum))
+
+
+def build_sharded_fim_warmup_fn(loss_fn: Callable, momentum: float, mesh) -> Callable:
+    """FIM warmup with clients sharded over the mesh; the stacked FIM trees
+    stay client-sharded (they feed the client-sharded neuron masks)."""
+    client = client_sharding(mesh)
+    repl = replicated_sharding(mesh)
+    return jax.jit(
+        _fim_warmup_body(loss_fn, momentum),
+        in_shardings=(repl, client, client, client),
+        out_shardings=client,
+    )

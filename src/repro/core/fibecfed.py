@@ -11,7 +11,7 @@ Tuning phase (Lines 11-19): sample K devices, merge global GAL params into
 each client's LoRA, curriculum-select batches, run masked local SGD/AdamW,
 FedAvg the GAL part on the server.
 
-Two interchangeable round engines (``engine=``):
+Three interchangeable round engines (``engine=``):
 
 * ``"vectorized"`` (default) — clients' LoRA/opt-state/mask pytrees are
   stacked along a leading client axis and the whole round runs as one jitted
@@ -19,6 +19,13 @@ Two interchangeable round engines (``engine=``):
   inside a ``vmap`` over clients, with the weighted GAL FedAvg fused in and
   buffer donation. The init phase likewise scores all (client, batch) cells
   in one call and batches the FIM warmup.
+* ``"sharded"`` — the vectorized programs with the stacked client axis
+  sharded over a device mesh (``mesh=``, default a data-only mesh over every
+  device): each device trains its shard of the chosen cohort and the fused
+  weighted GAL FedAvg becomes an all-reduce over the client axis. The client
+  stack and the per-round cohort are padded up to multiples of the mesh's
+  client-group count with inert rows (zero weight / zero valid steps), so
+  numerics stay bit-compatible with ``"vectorized"``.
 * ``"loop"`` — the legacy reference path: one jitted call per (client, batch)
   step, host-side merge and FedAvg. Kept for equivalence testing
   (``tests/test_engine_equivalence.py``) and as the semantic spec.
@@ -50,7 +57,7 @@ from repro.models.model_api import ModelFns
 from repro.optim import make_optimizer
 from repro.train.losses import make_logits_loss
 
-ENGINES = ("vectorized", "loop")
+ENGINES = ("vectorized", "loop", "sharded")
 
 # Compiled programs shared across FibecFed instances. Runners built on the
 # same model/loss_fn objects (every baseline preset in a comparison, both
@@ -123,10 +130,18 @@ class FibecFed:
         gal_mode: str = "importance",
         sparse_update: bool = True,
         engine: str = "vectorized",
+        mesh: Optional[Any] = None,
         seed: int = 0,
     ):
         if engine not in ENGINES:
             raise ValueError(f"engine must be one of {ENGINES}, got {engine!r}")
+        if engine == "sharded":
+            from repro.launch.mesh import make_client_mesh
+
+            mesh = mesh if mesh is not None else make_client_mesh()
+        elif mesh is not None:
+            raise ValueError("mesh= is only meaningful with engine='sharded'")
+        self.mesh = mesh
         self.model = model
         self.cfg = model.cfg
         self.loss_fn = loss_fn
@@ -155,7 +170,8 @@ class FibecFed:
             total_rounds=fl.rounds,
         )
 
-        vectorized = engine == "vectorized"
+        vectorized = engine in ("vectorized", "sharded")
+        self._stacked_engine = vectorized
         self.clients: List[ClientState] = []
         for cd in client_data:
             n = len(next(iter(cd.values())))
@@ -175,17 +191,38 @@ class FibecFed:
 
         if vectorized:
             C = len(self.clients)
-            stack = stack_clients(client_data, fl.batch_size)
-            self._stack_data = {k: jnp.asarray(v) for k, v in stack.data.items()}
+            k = min(fl.devices_per_round, C)
+            if self.mesh is not None:
+                # pad the stack to a multiple of the mesh's client groups,
+                # with enough inert rows to also pad each round's cohort
+                from repro.launch.mesh import num_client_groups
+
+                G = num_client_groups(self.mesh)
+                self._cohort_pad = -(-k // G) * G
+                C_stack = -(-(C + self._cohort_pad - k) // G) * G
+            else:
+                self._cohort_pad = k
+                C_stack = C
+            stack = stack_clients(client_data, fl.batch_size, pad_clients_to=C_stack)
+            self._stack_data = {k_: jnp.asarray(v) for k_, v in stack.data.items()}
             self._sample_valid = jnp.asarray(stack.sample_valid)
             self._stacked_lora = jax.tree.map(
-                lambda x: jnp.repeat(x[None], C, axis=0), init_lora
+                lambda x: jnp.repeat(x[None], C_stack, axis=0), init_lora
             )
             opt0 = self.opt_init(init_lora)
             self._stacked_opt = jax.tree.map(
-                lambda x: jnp.repeat(jnp.asarray(x)[None], C, axis=0), opt0
+                lambda x: jnp.repeat(jnp.asarray(x)[None], C_stack, axis=0), opt0
             )
             self._stacked_mask = None  # built in init_phase when sparse_update
+            if self.mesh is not None:
+                client_shd = eng.client_sharding(self.mesh)
+                repl_shd = eng.replicated_sharding(self.mesh)
+                self._stack_data = jax.device_put(self._stack_data, client_shd)
+                self._sample_valid = jax.device_put(self._sample_valid, client_shd)
+                self._stacked_lora = jax.device_put(self._stacked_lora, client_shd)
+                self._stacked_opt = jax.device_put(self._stacked_opt, client_shd)
+                self.params = jax.device_put(self.params, repl_shd)
+                self.global_lora = jax.device_put(self.global_lora, repl_shd)
             for ci, client in enumerate(self.clients):
                 client._lora_view = (
                     lambda ci=ci: jax.tree.map(lambda x: x[ci], self._stacked_lora)
@@ -267,22 +304,39 @@ class FibecFed:
     # vectorized-engine programs -----------------------------------------
 
     def _difficulty_fn(self):
-        loss_fn, metric = self.loss_fn, self.difficulty_metric
+        loss_fn, metric, mesh = self.loss_fn, self.difficulty_metric, self.mesh
+        if mesh is not None:
+            return _memo(
+                ("difficulty", loss_fn, metric, mesh),
+                lambda: eng.build_sharded_difficulty_fn(loss_fn, metric, mesh),
+            )
         return _memo(
             ("difficulty", loss_fn, metric),
             lambda: eng.build_difficulty_fn(loss_fn, metric),
         )
 
     def _fim_warmup_fn(self):
-        loss_fn, momentum = self.loss_fn, self.fl.fim_momentum
+        loss_fn, momentum, mesh = self.loss_fn, self.fl.fim_momentum, self.mesh
+        if mesh is not None:
+            return _memo(
+                ("fim_warmup", loss_fn, momentum, mesh),
+                lambda: eng.build_sharded_fim_warmup_fn(loss_fn, momentum, mesh),
+            )
         return _memo(
             ("fim_warmup", loss_fn, momentum),
             lambda: eng.build_fim_warmup_fn(loss_fn, momentum),
         )
 
     def _round_fn(self):
-        loss_fn, opt_update = self.loss_fn, self.opt_update
+        loss_fn, opt_update, mesh = self.loss_fn, self.opt_update, self.mesh
         use_mask = self._stacked_mask is not None
+        if mesh is not None:
+            return _memo(
+                ("round", loss_fn, self.optimizer_name, use_mask, mesh),
+                lambda: eng.build_sharded_round_fn(
+                    loss_fn, opt_update, use_neuron_mask=use_mask, mesh=mesh
+                ),
+            )
         return _memo(
             ("round", loss_fn, self.optimizer_name, use_mask),
             lambda: eng.build_round_fn(loss_fn, opt_update, use_neuron_mask=use_mask),
@@ -328,7 +382,7 @@ class FibecFed:
     def _compute_difficulty(self) -> None:
         """Lines 2-5: per-batch difficulty + ascending curriculum order."""
         metric = self.difficulty_metric
-        if self.engine == "vectorized" and metric in ("fisher", "loss"):
+        if self._stacked_engine and metric in ("fisher", "loss"):
             # one program over every (client, batch) cell, each client scored
             # with its own LoRA (matters on re-init after training rounds)
             scores = np.asarray(
@@ -350,21 +404,25 @@ class FibecFed:
     def _select_local_masks(self) -> None:
         """Lines 8-10: momentum-FIM warmup → per-client neuron keep-masks."""
         fl = self.fl
-        if self.engine == "vectorized":
+        if self._stacked_engine:
             C = len(self.clients)
-            warm_idx = np.stack(
-                [
-                    [
-                        int(c.order[min(e, len(c.order) - 1)])
-                        for e in range(fl.fim_warmup_epochs)
-                    ]
-                    for c in self.clients
+            C_stack = self._sample_valid.shape[0]  # includes mesh padding rows
+            warm_idx = np.zeros((C_stack, fl.fim_warmup_epochs), np.int64)
+            for ci, c in enumerate(self.clients):
+                warm_idx[ci] = [
+                    int(c.order[min(e, len(c.order) - 1)])
+                    for e in range(fl.fim_warmup_epochs)
                 ]
-            )
-            rows = jnp.arange(C)[:, None]
+            rows = jnp.arange(C_stack)[:, None]
             cols = jnp.asarray(warm_idx)
             wdata = {k: v[rows, cols] for k, v in self._stack_data.items()}
             wsv = self._sample_valid[rows, cols]
+            if self.mesh is not None:
+                # the eager gather above leaves committed replicated arrays;
+                # the sharded warmup program wants them client-sharded
+                client_shd = eng.client_sharding(self.mesh)
+                wdata = jax.device_put(wdata, client_shd)
+                wsv = jax.device_put(wsv, client_shd)
             fims = self._fim_warmup_fn()(self.params, self._stacked_lora, wdata, wsv)
             importance = sparsemod.neuron_importance(fims)  # leaves (C, L, d_out)
             if fl.sparse_ratio is not None:
@@ -380,8 +438,14 @@ class FibecFed:
                         imp_ci, client.lossless_fraction
                     )
                     per_client.append(neuron_mask_tree(self.cfg, self._init_lora, keep))
+                # padding rows are never trained; any finite mask will do
+                per_client += [per_client[0]] * (C_stack - C)
                 self._stacked_mask = jax.tree.map(
                     lambda *xs: jnp.stack(xs), *per_client
+                )
+            if self.mesh is not None:
+                self._stacked_mask = jax.device_put(
+                    self._stacked_mask, eng.client_sharding(self.mesh)
                 )
             for ci, client in enumerate(self.clients):
                 client.fim = jax.tree.map(lambda x: x[ci], fims)
@@ -441,6 +505,10 @@ class FibecFed:
         n_star = galmod.gal_layer_count(fractions, ns, L, fl.mu_global_local)
         self.gal_layers = self._select_layers(global_scores, n_star)
         self._gal_mask_tree = gal_mask_tree(self.cfg, self.global_lora, self.gal_layers)
+        if self.mesh is not None:
+            self._gal_mask_tree = jax.device_put(
+                self._gal_mask_tree, eng.replicated_sharding(self.mesh)
+            )
         self._gal_bytes_cache = None
 
         # --- local update parameter selection (lines 8-10) ---
@@ -492,7 +560,7 @@ class FibecFed:
         return 2 * k * self._gal_bytes_cache
 
     def run_round(self, t: int, lr: Optional[float] = None) -> Dict[str, float]:
-        if self.engine == "vectorized":
+        if self._stacked_engine:
             return self._run_round_vectorized(t, lr)
         return self._run_round_loop(t, lr)
 
@@ -502,12 +570,13 @@ class FibecFed:
         k = min(fl.devices_per_round, len(self.clients))
         chosen = self.rng.choice(len(self.clients), k, replace=False)
         losses = []
-        updates, weights = [], []
+        updates, weights, sel_counts = [], [], []
         step = self._grad_step()
         for ci in chosen:
             client = self.clients[ci]
             self._merge_global(client)
             sel = curr.selected_batch_ids(self.schedule, t, client.order)
+            sel_counts.append(len(sel))
             for _ in range(fl.local_epochs):
                 for j in sel:
                     ids = client.batches[int(j)]
@@ -534,7 +603,9 @@ class FibecFed:
         self.comm_bytes_per_round.append(self._gal_bytes(k))
         return {
             "loss": float(np.mean(losses)) if losses else float("nan"),
-            "selected_batches": float(len(sel)),
+            # cohort mean: a per-client count would track whichever client
+            # happened to be drawn last, not the curriculum schedule
+            "selected_batches": float(np.mean(sel_counts)),
             "comm_bytes": float(self.comm_bytes_per_round[-1]),
         }
 
@@ -551,6 +622,17 @@ class FibecFed:
         )
         w = np.asarray([self.clients[ci].n for ci in chosen], np.float64)
         w = (w / w.sum()).astype(np.float32)
+
+        if self._cohort_pad > k:
+            # sharded engine: pad the cohort onto the stack's inert padding
+            # rows (distinct indices keep the scatter free of duplicate
+            # writes; zero weight and zero valid steps make them no-ops)
+            pad_n = self._cohort_pad - k
+            pad_rows = np.arange(len(self.clients), len(self.clients) + pad_n)
+            chosen = np.concatenate([chosen, pad_rows])
+            batch_idx = np.pad(batch_idx, ((0, pad_n), (0, 0)))
+            step_valid = np.pad(step_valid, ((0, pad_n), (0, 0)))
+            w = np.pad(w, (0, pad_n))
 
         round_fn = self._round_fn()
         mask_arg = (
@@ -580,7 +662,12 @@ class FibecFed:
         return {
             "loss": mean_loss,
             "selected_batches": float(
-                len(curr.selected_batch_ids(self.schedule, t, orders[-1]))
+                np.mean(
+                    [
+                        len(curr.selected_batch_ids(self.schedule, t, o))
+                        for o in orders
+                    ]
+                )
             ),
             "comm_bytes": float(self.comm_bytes_per_round[-1]),
         }

@@ -11,7 +11,7 @@ mask, so masked reductions reproduce the ragged originals exactly.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, List, Sequence
+from typing import Dict, Iterator, List, Optional, Sequence
 
 import numpy as np
 
@@ -68,9 +68,19 @@ class ClientStack:
 
 
 def stack_clients(
-    client_data: Sequence[Dict[str, np.ndarray]], batch_size: int
+    client_data: Sequence[Dict[str, np.ndarray]],
+    batch_size: int,
+    *,
+    pad_clients_to: Optional[int] = None,
 ) -> ClientStack:
-    """Build the padded fixed-shape stack the vectorized engine trains on."""
+    """Build the padded fixed-shape stack the vectorized engine trains on.
+
+    ``pad_clients_to`` pads the *client* axis up to that count with dummy
+    rows (client 0's data, all-zero ``sample_valid``, zero ``n_batches`` /
+    ``n_samples``) so the stack divides evenly across a device mesh's client
+    groups (``launch.mesh.num_client_groups``). Padding rows sit after all
+    real clients; training on one is an exact no-op.
+    """
     per_client = []
     for cd in client_data:
         n = len(next(iter(cd.values())))
@@ -92,11 +102,20 @@ def stack_clients(
     valid = np.zeros((len(per_client), nb_max, batch_size), np.float32)
     for c, (_, _, ids, v) in enumerate(per_client):
         valid[c, : v.shape[0]] = v
+    n_batches = np.asarray([ids.shape[0] for _, _, ids, _ in per_client])
+    n_samples = np.asarray([n for _, n, _, _ in per_client])
+    C = len(per_client)
+    if pad_clients_to is not None and pad_clients_to > C:
+        extra = pad_clients_to - C
+        data = {k: np.concatenate([v, np.repeat(v[:1], extra, axis=0)]) for k, v in data.items()}
+        valid = np.concatenate([valid, np.zeros((extra,) + valid.shape[1:], np.float32)])
+        n_batches = np.concatenate([n_batches, np.zeros(extra, n_batches.dtype)])
+        n_samples = np.concatenate([n_samples, np.zeros(extra, n_samples.dtype)])
     return ClientStack(
         data=data,
         sample_valid=valid,
-        n_batches=np.asarray([ids.shape[0] for _, _, ids, _ in per_client]),
-        n_samples=np.asarray([n for _, n, _, _ in per_client]),
+        n_batches=n_batches,
+        n_samples=n_samples,
     )
 
 

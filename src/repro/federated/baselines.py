@@ -51,6 +51,7 @@ def make_runner(
     seed: int = 0,
     optimizer: str = "sgd",
     engine: str = "vectorized",
+    mesh: Any = None,
 ) -> FibecFed:
     preset = dict(BASELINES[name])
     curriculum = preset.pop("curriculum", None)
@@ -60,7 +61,7 @@ def make_runner(
         fl = dataclasses.replace(fl, curriculum=curriculum)
     return FibecFed(
         model, loss_fn, fl, client_data, seed=seed, optimizer=optimizer,
-        engine=engine, **preset
+        engine=engine, mesh=mesh, **preset
     )
 
 

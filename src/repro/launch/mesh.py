@@ -9,15 +9,29 @@ device state (the dry-run sets XLA_FLAGS before the first jax call).
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
+import numpy as np
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return jax.make_mesh(shape, axes)
+
+
+def make_client_mesh(num_devices: Optional[int] = None):
+    """Data-only mesh for the sharded FL round engine: one ``data`` axis over
+    (the first ``num_devices`` of) the available devices, each index owning
+    one shard of the stacked client axis. Tensor parallelism is a separate
+    concern (the production train step in launch/steps); the round engine
+    replicates base params and shards clients."""
+    devs = jax.devices()
+    n = len(devs) if num_devices is None else num_devices
+    if not 1 <= n <= len(devs):
+        raise ValueError(f"need 1..{len(devs)} devices, got {n}")
+    return jax.sharding.Mesh(np.asarray(devs[:n]), ("data",))
 
 
 def make_host_mesh(data: int = 2, model: int = 2):

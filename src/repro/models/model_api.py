@@ -104,6 +104,10 @@ def _decoder_fns(cfg: ModelConfig) -> ModelFns:
         return _tf.decoder_forward(
             params, lora["layers"], batch["tokens"], cfg,
             prefix_embeds=batch.get("prefix_embeds"),
+            # optional (B,) validity weights for the MoE aux loss; the masked
+            # loss passes them so padded batches score like their ragged
+            # originals (ignored by non-MoE families)
+            sample_weight=batch.get("sample_mask"),
         )
 
     def forward_probe(params, lora, batch, embed_noise=None):

@@ -55,11 +55,20 @@ def capacity(group: int, mcfg: MoEConfig) -> int:
 
 
 def route(
-    x: jax.Array, router_w: jax.Array, mcfg: MoEConfig
+    x: jax.Array,
+    router_w: jax.Array,
+    mcfg: MoEConfig,
+    sample_weight: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """x: (..., G, D) groups of tokens. Returns (dispatch, combine, aux_loss).
 
     dispatch: (..., G, E, C) bool-ish mask; combine: same shape, f32 weights.
+
+    ``sample_weight`` (B,) restricts the load-balance aux loss to valid
+    samples when x is a (B, n_groups, G, D) training batch whose groups never
+    span samples — the aux mean over the batch axis becomes weight-averaged,
+    so padded fixed-shape batches reproduce their ragged originals exactly.
+    Routing itself is per-sample and needs no masking.
     """
     E = mcfg.num_experts
     G = x.shape[-2]
@@ -89,18 +98,35 @@ def route(
     # load-balance aux loss (Switch-style)
     me = jnp.mean(probs, axis=-2)  # (...,E) avg router prob
     ce = jnp.mean(jnp.sum(onehot, axis=-2), axis=-2) / mcfg.top_k  # frac routed
-    aux = jnp.mean(jnp.sum(me * ce, axis=-1)) * E * mcfg.aux_loss_weight
+    per_group = jnp.sum(me * ce, axis=-1)  # (B, n_groups) for train batches
+    if sample_weight is None:
+        aux = jnp.mean(per_group) * E * mcfg.aux_loss_weight
+    else:
+        assert per_group.ndim == 2, "sample_weight needs (B, n_groups, G, D) tokens"
+        sw = sample_weight.astype(jnp.float32)
+        denom = jnp.maximum(jnp.sum(sw), 1.0) * per_group.shape[-1]
+        aux = jnp.sum(per_group * sw[:, None]) / denom * E * mcfg.aux_loss_weight
     return dispatch, combine, aux
 
 
 def apply_moe(
-    x: jax.Array, p, mcfg: MoEConfig, *, token_parallel: bool = False
+    x: jax.Array,
+    p,
+    mcfg: MoEConfig,
+    *,
+    token_parallel: bool = False,
+    sample_weight: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, jax.Array]:
-    """x: (B, S, D); p holds the per-layer slice. Returns (y, aux_loss)."""
+    """x: (B, S, D); p holds the per-layer slice. Returns (y, aux_loss).
+
+    ``sample_weight`` (B,) makes the aux loss ignore padding samples (see
+    :func:`route`); it never changes routing or outputs."""
     B, S, D = x.shape
     if S == 1:
-        # decode: route the whole batch as one group
+        # decode: route the whole batch as one group (mixes samples, so the
+        # per-sample aux weighting does not apply)
         xg = x.reshape(1, 1, B, D)
+        sample_weight = None
     else:
         G = min(mcfg.router_group_size, S)
         assert S % G == 0, (S, G)
@@ -111,7 +137,7 @@ def apply_moe(
     # expert weights only (shardings.py moe_token_parallel) and lets GSPMD
     # place the FFN; apply_moe itself stays constraint-free.
     del token_parallel
-    dispatch, combine, aux = route(xg, p["router"], mcfg)
+    dispatch, combine, aux = route(xg, p["router"], mcfg, sample_weight=sample_weight)
     xe = jnp.einsum("bngec,bngd->ebncd", dispatch.astype(x.dtype), xg)
     # expert FFN (SwiGLU) — e is leading so pjit shards experts on `model`
     g = jnp.einsum("ebncd,edf->ebncf", xe, p["e_gate"])

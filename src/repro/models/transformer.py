@@ -181,9 +181,12 @@ def attention_sublayer(
     return out, new_cache
 
 
-def _ffn(x, p, cfg: ModelConfig, lora, lora_scale):
+def _ffn(x, p, cfg: ModelConfig, lora, lora_scale, sample_weight=None):
     if cfg.family == "moe":
-        y, aux = apply_moe(x, p, cfg.moe, token_parallel=cfg.moe_token_parallel)
+        y, aux = apply_moe(
+            x, p, cfg.moe, token_parallel=cfg.moe_token_parallel,
+            sample_weight=sample_weight,
+        )
         return y, aux
     return apply_mlp(x, p, cfg.mlp, lora, lora_scale), jnp.zeros((), jnp.float32)
 
@@ -191,6 +194,7 @@ def _ffn(x, p, cfg: ModelConfig, lora, lora_scale):
 def decoder_layer(
     h, p, lora, cfg: ModelConfig, positions, *, lora_scale,
     cache=None, cache_position=None, ring=False, causal=True,
+    sample_weight=None,
 ):
     """One transformer block. Returns (h, aux_loss, new_cache)."""
     x = _norm(h, p, "attn_norm", cfg.norm)
@@ -199,12 +203,12 @@ def decoder_layer(
         cache=cache, cache_position=cache_position, ring=ring,
     )
     if cfg.parallel_residual:
-        mlp_out, aux = _ffn(x, p, cfg, lora, lora_scale)
+        mlp_out, aux = _ffn(x, p, cfg, lora, lora_scale, sample_weight)
         h = h + attn_out + mlp_out
     else:
         h = h + attn_out
         x2 = _norm(h, p, "mlp_norm", cfg.norm)
-        mlp_out, aux = _ffn(x2, p, cfg, lora, lora_scale)
+        mlp_out, aux = _ffn(x2, p, cfg, lora, lora_scale, sample_weight)
         h = h + mlp_out
     return h, aux, new_cache
 
@@ -243,6 +247,7 @@ def decoder_forward(
     lora_scale: Optional[float] = None,
     embed_noise: Optional[jax.Array] = None,
     collect_layer_norms: bool = False,
+    sample_weight: Optional[jax.Array] = None,
 ):
     """Training/eval forward. Returns (logits (B, S_total, V), aux_loss).
 
@@ -250,6 +255,8 @@ def decoder_forward(
     FibecFed GAL-sensitivity probe (paper Eq. 6-9). With
     ``collect_layer_norms`` the per-layer per-sample Frobenius norms of the
     hidden states are returned as a third output (num_layers, B).
+    ``sample_weight`` (B,) restricts the MoE load-balance aux loss to valid
+    samples (padded-batch training); logits are unaffected.
     """
     lora_scale = lora_scale if lora_scale is not None else cfg.lora_alpha / cfg.lora_rank
     h = _embed_inputs(params, tokens, cfg, prefix_embeds)
@@ -262,7 +269,8 @@ def decoder_forward(
 
     def layer_fn(h, p_slice, lora_slice):
         h, aux_l, _ = decoder_layer(
-            h, p_slice, lora_slice, cfg, positions, lora_scale=lora_scale
+            h, p_slice, lora_slice, cfg, positions, lora_scale=lora_scale,
+            sample_weight=sample_weight,
         )
         if cfg.seq_parallel:
             from repro.models.sharding_ctx import constrain

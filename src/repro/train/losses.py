@@ -51,8 +51,9 @@ def make_loss_fn(model: ModelFns) -> Callable:
     (per-sample CE weighted by the mask). For every loss here the masked
     value equals the plain loss of the corresponding ragged sub-batch, which
     is what lets the vectorized FL engine train on padded fixed-shape
-    batches at full batched-matmul efficiency. (Caveat: the MoE aux loss is
-    computed over the padded batch, not the ragged one.)
+    batches at full batched-matmul efficiency. The MoE load-balance aux term
+    is mask-aware too: the mask is threaded to the router as a per-sample
+    weight, so padded and ragged batches produce identical aux losses.
     """
     cached = _LOSS_FN_CACHE.get(id(model))
     if cached is not None:
@@ -69,6 +70,8 @@ def make_loss_fn(model: ModelFns) -> Callable:
         return lm_loss(logits, batch["tokens"], offset) + aux
 
     def masked(params, lora, batch: Dict[str, Any], sample_mask):
+        if cfg.family == "moe":
+            batch = dict(batch, sample_mask=sample_mask)
         logits, aux = model.forward(params, lora, batch)
         m = sample_mask.astype(jnp.float32)
         denom = jnp.maximum(jnp.sum(m), 1.0)

@@ -1,0 +1,106 @@
+"""scripts/bench_compare.py: the benchmark regression gate must fail loudly
+on real regressions, stay quiet within tolerance, and soften to warnings on
+shared runners (--warn-only). Pure-python — no jax involved."""
+import importlib.util
+import json
+import pathlib
+
+import pytest
+
+_SPEC = importlib.util.spec_from_file_location(
+    "bench_compare",
+    pathlib.Path(__file__).resolve().parent.parent / "scripts" / "bench_compare.py",
+)
+bench_compare = importlib.util.module_from_spec(_SPEC)
+_SPEC.loader.exec_module(bench_compare)
+
+
+def _result(loop=5.0, vectorized=20.0, devices=8):
+    return {
+        "bench": "fl_round",
+        "num_xla_devices": devices,
+        "engines": {
+            "loop": {"rounds_per_s": loop},
+            "vectorized": {"rounds_per_s": vectorized},
+        },
+        "speedups": {"vectorized_over_loop": vectorized / loop},
+    }
+
+
+@pytest.fixture
+def files(tmp_path):
+    def write(name, payload):
+        p = tmp_path / name
+        p.write_text(json.dumps(payload))
+        return str(p)
+
+    return write
+
+
+def test_within_tolerance_passes(files):
+    cur = files("cur.json", _result(loop=4.0, vectorized=16.0))  # -20%, same ratio
+    base = files("base.json", _result())
+    assert bench_compare.main([cur, "--baseline", base]) == 0
+
+
+def test_regression_fails(files):
+    cur = files("cur.json", _result(vectorized=10.0))  # halved => ratio halved
+    base = files("base.json", _result())
+    assert bench_compare.main([cur, "--baseline", base]) == 1
+
+
+def test_warn_only_softens_regression(files):
+    cur = files("cur.json", _result(vectorized=10.0))
+    base = files("base.json", _result())
+    assert bench_compare.main([cur, "--baseline", base, "--warn-only"]) == 0
+
+
+def test_speedup_ratio_regression_detected_alone(files):
+    # absolute throughputs improved, but the vectorized/loop ratio collapsed —
+    # the machine-independent signal must still trip the gate
+    cur = files("cur.json", _result(loop=20.0, vectorized=22.0))
+    base = files("base.json", _result())
+    checks = bench_compare.compare(
+        json.loads(pathlib.Path(cur).read_text()),
+        json.loads(pathlib.Path(base).read_text()),
+        0.30,
+    )
+    by_name = {name: bad for name, _, _, _, bad in checks}
+    assert by_name["speedup/vectorized_over_loop"]
+    assert not by_name["rounds_per_s/vectorized"]
+
+
+def test_device_count_mismatch_skips_comparison(files, capsys):
+    # a 2-device local run vs the 8-device CI baseline: ratios are
+    # structurally different, so the gate must skip rather than cry wolf
+    cur = files("cur.json", _result(vectorized=10.0, devices=2))
+    base = files("base.json", _result(devices=8))
+    assert bench_compare.main([cur, "--baseline", base]) == 0
+    assert "skipped" in capsys.readouterr().out
+    # ...unless explicitly forced, in which case the regression is real output
+    assert bench_compare.main(
+        [cur, "--baseline", base, "--allow-device-mismatch"]
+    ) == 1
+
+
+def test_unusable_inputs_exit_2(files, tmp_path):
+    base = files("base.json", _result())
+    assert bench_compare.main([str(tmp_path / "missing.json"), "--baseline", base]) == 2
+    empty_cur = files("cur.json", {"engines": {}, "num_xla_devices": 8})
+    empty_base = files("base2.json", {"engines": {}, "num_xla_devices": 8})
+    assert bench_compare.main([empty_cur, "--baseline", empty_base]) == 2
+    # a missing device count must refuse (exit 2), not silently skip (exit 0)
+    no_dev = dict(_result())
+    del no_dev["num_xla_devices"]
+    assert bench_compare.main([files("nd.json", no_dev), "--baseline", base]) == 2
+
+
+def test_committed_baseline_is_loadable():
+    path = pathlib.Path(__file__).resolve().parent.parent / "benchmarks" / "baselines" / "fl_round.json"
+    payload = json.loads(path.read_text())
+    assert payload["bench"] == "fl_round"
+    # recorded under the CI regime so tier1-multidevice compares like for like
+    assert payload["num_xla_devices"] == 8
+    for engine in ("loop", "vectorized", "sharded"):
+        assert payload["engines"][engine]["rounds_per_s"] > 0
+    assert payload["speedups"]["vectorized_over_loop"] > 0

@@ -3,9 +3,14 @@
 The loop engine (one jitted call per (client, batch) step, host-side FedAvg)
 is the semantic spec of Algorithm 1; the vectorized engine (stacked client
 pytrees, scan-over-batches inside vmap-over-clients, fused aggregation) is
-the fast path. Same seeds => same client sampling, same curriculum orders,
-same update sequence — global LoRA trees, per-round losses, and comm-bytes
-accounting must agree to float tolerance across full init+tuning runs.
+the fast path, and the sharded engine is the vectorized program with the
+client axis sharded over a device mesh (stack and cohort padded to the
+mesh's client-group count). Same seeds => same client sampling, same
+curriculum orders, same update sequence — global LoRA trees, per-round
+losses, and comm-bytes accounting must agree to float tolerance across full
+init+tuning runs, on every mesh size (run under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to cover the
+multi-device cases; CI's tier1-multidevice job does).
 """
 import jax
 import numpy as np
@@ -13,7 +18,9 @@ import pytest
 
 from repro.config import FibecFedConfig, ModelConfig
 from repro.data import dirichlet_partition, make_keyword_task
+from repro.data.pipeline import stack_clients
 from repro.federated import make_runner
+from repro.launch.mesh import make_client_mesh
 from repro.models import build_model
 from repro.train import make_loss_fn
 
@@ -114,3 +121,115 @@ def test_unknown_engine_rejected(world):
     model, loss_fn, client_data = world
     with pytest.raises(ValueError):
         make_runner("fibecfed", model, loss_fn, FL, client_data, engine="turbo")
+
+
+# --------------------------------------------------------------------------
+# mesh-sharded engine
+# --------------------------------------------------------------------------
+
+# 53 samples over 5 clients: C indivisible by every multi-device mesh below,
+# so the client-stack padding and the padded cohort (devices_per_round=3 is
+# odd too) are exercised, not just the evenly-divisible case
+FL5 = FibecFedConfig(
+    num_devices=5, devices_per_round=3, rounds=4, batch_size=4,
+    learning_rate=5e-3, fim_warmup_epochs=1, gal_fraction=0.5, sparse_ratio=0.5,
+)
+
+
+@pytest.fixture(scope="module")
+def world5(world):
+    model, loss_fn, _ = world  # share the model => shared compile memos
+    task = make_keyword_task(n_samples=53, seq_len=12, vocab_size=256, seed=3)
+    parts = dirichlet_partition(task.data["label"], FL5.num_devices, 1.0, seed=3)
+    client_data = [
+        {k: v[idx] for k, v in task.data.items() if k != "label"} for idx in parts
+    ]
+    return model, loss_fn, client_data
+
+
+@pytest.mark.parametrize("n_devices", [1, 2, 8])
+def test_sharded_equivalent_to_loop(world5, n_devices):
+    """engine="sharded" must replay the loop engine exactly on every mesh
+    size: allclose LoRA trees and losses, identical comm accounting."""
+    if n_devices > len(jax.devices()):
+        pytest.skip(
+            f"needs {n_devices} XLA devices "
+            "(XLA_FLAGS=--xla_force_host_platform_device_count=8)"
+        )
+    model, loss_fn, client_data = world5
+    mesh = make_client_mesh(n_devices)
+    runners, history = {}, {}
+    for engine, kw in (("loop", {}), ("sharded", {"mesh": mesh})):
+        r = make_runner(
+            "fibecfed", model, loss_fn, FL5, client_data,
+            optimizer="adamw", engine=engine, seed=11, **kw,
+        )
+        r.init_phase()
+        history[engine] = [r.run_round(t) for t in range(ROUNDS)]
+        runners[engine] = r
+    r_loop, r_sh = runners["loop"], runners["sharded"]
+
+    for hl, hs in zip(history["loop"], history["sharded"]):
+        assert hl["loss"] == pytest.approx(hs["loss"], rel=1e-4, abs=1e-5)
+        assert hl["selected_batches"] == hs["selected_batches"]
+    assert r_loop.comm_bytes_per_round == r_sh.comm_bytes_per_round
+
+    for a, b in zip(
+        jax.tree.leaves(r_loop.global_lora), jax.tree.leaves(r_sh.global_lora)
+    ):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=5e-5, rtol=1e-4)
+    for cl, cs in zip(r_loop.clients, r_sh.clients):
+        for a, b in zip(jax.tree.leaves(cl.lora), jax.tree.leaves(cs.lora)):
+            np.testing.assert_allclose(
+                np.asarray(a), np.asarray(b), atol=5e-5, rtol=1e-4
+            )
+
+    # the stack really is padded and sharded on multi-device meshes
+    C_stack = r_sh._sample_valid.shape[0]
+    assert C_stack % n_devices == 0 and C_stack >= FL5.num_devices
+    lead = jax.tree.leaves(r_sh._stacked_lora)[0]
+    assert lead.sharding.mesh.shape.get("data") == n_devices
+
+
+def test_sharded_matches_vectorized_bitwise_on_one_device(world5):
+    """On a 1-device mesh the sharded program is the vectorized program (the
+    sharding constraints are no-ops), so the histories agree to float32
+    determinism — a cheap guard that the shared round body didn't fork."""
+    model, loss_fn, client_data = world5
+    hist = {}
+    for engine, kw in (("vectorized", {}), ("sharded", {"mesh": make_client_mesh(1)})):
+        r = make_runner(
+            "fibecfed", model, loss_fn, FL5, client_data,
+            optimizer="sgd", engine=engine, seed=2, **kw,
+        )
+        r.init_phase()
+        hist[engine] = [r.run_round(t)["loss"] for t in range(ROUNDS)]
+    assert hist["vectorized"] == pytest.approx(hist["sharded"], rel=1e-6)
+
+
+def test_mesh_rejected_for_unsharded_engines(world5):
+    model, loss_fn, client_data = world5
+    with pytest.raises(ValueError):
+        make_runner(
+            "fibecfed", model, loss_fn, FL5, client_data,
+            engine="vectorized", mesh=make_client_mesh(1),
+        )
+
+
+def test_stack_clients_pads_inert_rows():
+    data = [
+        {"tokens": np.arange(10, dtype=np.int32).reshape(5, 2)},
+        {"tokens": np.arange(6, dtype=np.int32).reshape(3, 2)},
+    ]
+    stack = stack_clients(data, 2, pad_clients_to=4)
+    assert stack.num_clients == 4
+    assert stack.data["tokens"].shape[0] == 4
+    # padding rows: no valid samples, zero sizes, finite data (client 0 copy)
+    assert stack.sample_valid[2:].sum() == 0.0
+    assert list(stack.n_batches) == [3, 2, 0, 0]
+    assert list(stack.n_samples) == [5, 3, 0, 0]
+    np.testing.assert_array_equal(stack.data["tokens"][2], stack.data["tokens"][0])
+    # real rows unchanged vs the unpadded stack
+    ref = stack_clients(data, 2)
+    np.testing.assert_array_equal(stack.data["tokens"][:2], ref.data["tokens"])
+    np.testing.assert_array_equal(stack.sample_valid[:2], ref.sample_valid)

@@ -66,6 +66,46 @@ def test_moe_decode_single_token_path(rng):
     assert bool(jnp.all(jnp.isfinite(y)))
 
 
+def test_masked_loss_aux_ignores_padding(rng):
+    """The MoE load-balance aux term must be computed over valid samples
+    only: a padded fixed-shape batch scores exactly like its ragged original
+    through ``make_loss_fn(...).masked`` (ROADMAP "MoE aux-loss on padded
+    batches"). Routing is per-sample, so only the aux mean needs masking."""
+    from repro.config import ModelConfig
+    from repro.models import build_model
+    from repro.train import make_loss_fn
+
+    cfg = ModelConfig(
+        name="tiny-moe-auxtest", family="moe", num_layers=2, d_model=16,
+        num_heads=2, num_kv_heads=2, d_ff=32, vocab_size=64, head_dim=8,
+        dtype="float32", lora_rank=2, max_seq_len=32,
+        moe=MoEConfig(num_experts=4, top_k=2, d_ff_expert=16,
+                      router_group_size=8, aux_loss_weight=0.05),
+    )
+    model = build_model(cfg)
+    params = model.init_params(rng)
+    lora = model.init_lora(jax.random.fold_in(rng, 1))
+    loss_fn = make_loss_fn(model)
+
+    gen = np.random.default_rng(0)
+    valid = gen.integers(1, 64, (3, 8)).astype(np.int32)
+    junk = gen.integers(1, 64, (3, 8)).astype(np.int32)
+    plain = float(loss_fn(params, lora, {"tokens": jnp.asarray(valid)}))
+    padded = {"tokens": jnp.asarray(np.concatenate([valid, junk]))}
+    mask = jnp.asarray([1.0, 1.0, 1.0, 0.0, 0.0, 0.0])
+    masked = float(loss_fn.masked(params, lora, padded, mask))
+    assert masked == pytest.approx(plain, abs=1e-6)
+    # an all-valid mask degenerates to the plain loss
+    full = float(loss_fn.masked(params, lora, {"tokens": jnp.asarray(valid)}, jnp.ones(3)))
+    assert full == pytest.approx(plain, abs=1e-6)
+    # teeth: different padding content, same masked loss — the unmasked aux
+    # (pre-fix behavior) would shift with the junk rows' routing statistics
+    junk2 = gen.integers(1, 64, (3, 8)).astype(np.int32)
+    padded2 = {"tokens": jnp.asarray(np.concatenate([valid, junk2]))}
+    masked2 = float(loss_fn.masked(params, lora, padded2, mask))
+    assert masked2 == pytest.approx(masked, abs=1e-7)
+
+
 def test_shared_expert_adds_dense_path(rng):
     mcfg = MoEConfig(num_experts=4, top_k=1, d_ff_expert=16, shared_expert=True,
                      d_ff_shared=16, router_group_size=8)
