@@ -1,9 +1,13 @@
-"""Benchmark regression gate: compare a BENCH_fl_round.json to a baseline.
+"""Benchmark regression gate: compare a benchmark JSON to a baseline.
 
 ``fl_round_bench.py --json BENCH_fl_round.json`` emits per-engine rounds/sec
 plus engine-over-loop speedup ratios; this script compares them against a
 committed baseline (``benchmarks/baselines/fl_round.json``) and fails loudly
 when anything regressed by more than ``--max-regression`` (default 30%).
+``async_bench.py --json BENCH_async.json`` payloads gate the same way via
+their per-scenario async-over-sync virtual-time speedups (baseline
+``benchmarks/baselines/async.json``; no ``engines`` section — only the
+``speedups`` block is compared).
 
 Absolute rounds/sec are machine-dependent, so on shared CI runners pass
 ``--warn-only``: every check still runs and prints, but regressions exit 0.

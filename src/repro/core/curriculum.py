@@ -67,24 +67,36 @@ def step_plan(
     t: int,
     orders,
     local_epochs: int = 1,
+    *,
+    bucket: bool = True,
 ):
-    """Padded per-client step schedule for the vectorized round engine.
+    """Padded per-client step schedule for the vectorized/async engines.
 
     ``orders`` is the chosen clients' curriculum orders (ragged). Returns
     ``(batch_idx (k, S) int32, step_valid (k, S) f32)`` where
-    ``S = local_epochs * max_selected``: step ``s`` of client ``i`` trains on
-    batch ``batch_idx[i, s]`` iff ``step_valid[i, s]``, replaying exactly the
-    loop engine's epoch-major traversal of ``selected_batch_ids``. Padded
+    ``S = local_epochs * padded_selected``: step ``s`` of client ``i`` trains
+    on batch ``batch_idx[i, s]`` iff ``step_valid[i, s]``, replaying exactly
+    the loop engine's epoch-major traversal of ``selected_batch_ids``. Padded
     steps keep index 0 and are masked to no-ops by the engine.
+
+    With ``bucket`` (the default) the per-epoch selected count is rounded up
+    to the next power of two (:func:`repro.data.pipeline.bucket_size`), so a
+    full curriculum ramp from ``beta * NB`` to ``NB`` batches retraces the
+    jitted round program at most ``log2(S_max) + 1`` times instead of once
+    per distinct count — the padding steps are masked no-ops, so engine
+    equivalence is unaffected.
     """
+    from repro.data.pipeline import bucket_size
+
     sels = [selected_batch_ids(schedule, t, o) for o in orders]
     max_sel = max(len(s) for s in sels)
-    k, S = len(sels), local_epochs * max_sel
+    padded = bucket_size(max_sel) if bucket else max_sel
+    k, S = len(sels), local_epochs * padded
     batch_idx = np.zeros((k, S), np.int32)
     step_valid = np.zeros((k, S), np.float32)
     for i, sel in enumerate(sels):
         for e in range(local_epochs):
-            lo = e * max_sel
+            lo = e * padded
             batch_idx[i, lo : lo + len(sel)] = sel
             step_valid[i, lo : lo + len(sel)] = 1.0
     return batch_idx, step_valid

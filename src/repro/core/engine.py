@@ -33,6 +33,14 @@ aggregation as a collective. Client counts must be padded to a multiple of
 the mesh's client-group count (``stack_clients(pad_clients_to=...)``); the
 runner also pads the chosen cohort with dedicated padding rows (zero weight,
 zero valid steps) so gather/scatter never write one row twice.
+
+The round program decomposes into two separately-callable pieces shared by
+every engine: :func:`make_client_step` (one masked local step) and
+:func:`gal_weighted_merge` (the fused weighted GAL FedAvg). The async engine
+(``repro.federated.async_agg``) recombines them without the vmap barrier:
+:func:`build_client_train_fn` scans one client's whole local round as its
+own jitted program, and :func:`build_merge_fn` jits the merge standalone so
+the server can flush its completion buffer the moment any K clients report.
 """
 from __future__ import annotations
 
@@ -75,6 +83,54 @@ def _masked_loss(loss_fn: Callable) -> Callable:
     return lambda params, lora, batch, sv: masked_mean_loss(
         loss_fn, params, lora, batch, sv
     )
+
+
+def make_client_step(loss_fn: Callable, opt_update: Callable) -> Callable:
+    """One client's masked local SGD/AdamW step (Alg. 1 lines 16-17).
+
+    ``step(params, lora, opt, mask, batch, sample_valid, lr) -> (loss,
+    new_lora, new_opt)``. This is the shared inner body: the round program
+    vmaps it over the cohort, the async per-client train program scans it
+    without the vmap barrier — both therefore share numerics by
+    construction.
+    """
+    masked = _masked_loss(loss_fn)
+
+    def one_step(params, lora, opt, mask, batch, sample_valid, lr):
+        loss, grads = jax.value_and_grad(
+            lambda x: masked(params, x, batch, sample_valid)
+        )(lora)
+        new_lora, new_opt = opt_update(grads, opt, lora, lr, mask)
+        return loss, new_lora, new_opt
+
+    return one_step
+
+
+def gal_weighted_merge(global_lora, gal_mask, stacked_client_lora, weights):
+    """Fused weighted FedAvg over the GAL part only (Alg. 1 line 18).
+
+    ``weights`` (k,) must already be normalized (the async aggregator folds
+    its staleness discount in before normalizing); the contraction over the
+    stacked client axis IS the server aggregation — under a sharded client
+    axis it lowers to an all-reduce, called standalone it is the async
+    buffer flush.
+    """
+    agg = jax.tree.map(
+        lambda x: jnp.tensordot(weights, x, axes=1), stacked_client_lora
+    )
+    return jax.tree.map(
+        lambda g, m, a: m * a + (1.0 - m) * g, global_lora, gal_mask, agg
+    )
+
+
+def build_merge_fn() -> Callable:
+    """Jitted :func:`gal_weighted_merge` — the async server's buffer flush.
+
+    The old global is *not* donated: in-flight stragglers may still be
+    training against it (the double-buffered front/back pair in
+    ``federated.async_agg`` owns buffer lifetime, not XLA).
+    """
+    return jax.jit(gal_weighted_merge)
 
 
 def _round_body(
@@ -122,14 +178,10 @@ def _round_body(
             lambda g, l, m: m * g + (1.0 - m) * l, global_lora, cl_lora, gal_mask
         )
 
-        masked = _masked_loss(loss_fn)
+        client_step = make_client_step(loss_fn, opt_update)
 
         def one_step(lo, op, mk, batch, sv):
-            loss, grads = jax.value_and_grad(
-                lambda x: masked(params, x, batch, sv)
-            )(lo)
-            new_lo, new_op = opt_update(grads, op, lo, lr, mk)
-            return loss, new_lo, new_op
+            return client_step(params, lo, op, mk, batch, sv, lr)
 
         def step(carry, xs):
             lora_c, opt_c = carry
@@ -164,10 +216,7 @@ def _round_body(
 
         # line 18: weighted FedAvg fused over the GAL part only; with the k
         # axis sharded this contraction IS the server all-reduce (psum)
-        agg = jax.tree.map(lambda x: jnp.tensordot(weights, x, axes=1), cl_lora)
-        new_global = jax.tree.map(
-            lambda g, m, a: m * a + (1.0 - m) * g, global_lora, gal_mask, agg
-        )
+        new_global = gal_weighted_merge(global_lora, gal_mask, cl_lora, weights)
 
         return (
             new_global,
@@ -238,6 +287,73 @@ def build_sharded_round_fn(
         out_shardings=(repl, client, client, repl),
         donate_argnums=(1, 2, 3),
     )
+
+
+def _client_train_body(
+    loss_fn: Callable, opt_update: Callable, *, use_neuron_mask: bool
+) -> Callable:
+    """One client's whole local round: merge-in (line 15) + step scan.
+
+    The same ``make_client_step`` body as the vectorized round program, but
+    scanned for a *single* client with no vmap barrier — the async engine
+    dispatches one of these per completion event, so a fast client's program
+    never waits on a straggler's.
+    """
+    client_step = make_client_step(loss_fn, opt_update)
+
+    def train_fn(
+        params,
+        global_lora,
+        lora,
+        opt,
+        neuron_mask,
+        gal_mask,
+        cdata: Dict[str, Any],
+        sample_valid,
+        batch_idx,
+        step_valid,
+        lr,
+    ):
+        # line 15: overwrite the GAL part with the pulled global version
+        lora = jax.tree.map(
+            lambda g, l, m: m * g + (1.0 - m) * l, global_lora, lora, gal_mask
+        )
+        mask = neuron_mask if use_neuron_mask else None
+
+        def step(carry, xs):
+            lo, op = carry
+            bidx, active = xs
+            batch = {kk: v[bidx] for kk, v in cdata.items()}
+            sv = sample_valid[bidx]
+            loss, new_lo, new_op = client_step(params, lo, op, mask, batch, sv, lr)
+            # padded steps compute but do not commit (same no-op semantics
+            # as the vectorized round program's tree_where)
+            lo = tree_where(active, new_lo, lo)
+            op = tree_where(active, new_op, op)
+            return (lo, op), loss
+
+        (lora, opt), losses = jax.lax.scan(step, (lora, opt), (batch_idx, step_valid))
+        return lora, opt, losses
+
+    return train_fn
+
+
+def build_client_train_fn(
+    loss_fn: Callable, opt_update: Callable, *, use_neuron_mask: bool
+) -> Callable:
+    """Jitted single-client local round for the async engine.
+
+    ``train_fn(params, global_lora, lora, opt, neuron_mask, gal_mask, cdata,
+    sample_valid, batch_idx, step_valid, lr) -> (new_lora, new_opt,
+    losses (S,))`` where ``cdata``/``sample_valid`` are one client's padded
+    ``(NB, B, ...)`` data grid row and ``batch_idx``/``step_valid`` its
+    ``(S,)`` curriculum step plan. The client's own LoRA/optimizer buffers
+    are donated (a client is never dispatched while a previous update of its
+    is still buffered); the pulled ``global_lora`` is NOT donated — several
+    in-flight clients may share one version.
+    """
+    body = _client_train_body(loss_fn, opt_update, use_neuron_mask=use_neuron_mask)
+    return jax.jit(body, donate_argnums=(2, 3))
 
 
 def _difficulty_body(loss_fn: Callable, metric: str) -> Callable:

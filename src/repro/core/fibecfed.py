@@ -29,6 +29,16 @@ Three interchangeable round engines (``engine=``):
 * ``"loop"`` — the legacy reference path: one jitted call per (client, batch)
   step, host-side merge and FedAvg. Kept for equivalence testing
   (``tests/test_engine_equivalence.py``) and as the semantic spec.
+* ``"async"`` — straggler-aware event-driven aggregation
+  (``repro.federated.async_agg``): an event queue on a virtual clock models
+  per-client compute/comm latency under a heterogeneity ``scenario=``
+  (``repro.federated.hetero`` presets — speed skew, dropout, bursty
+  arrival), each client trains its own jitted scan program
+  (``engine.build_client_train_fn``, no vmap barrier), and the server
+  merges any ``buffer_size`` completions into a double-buffered global with
+  staleness-discounted FedAvg weights. With the homogeneous scenario and
+  buffer = cohort size it reduces exactly to the synchronous engines; comm
+  bytes are attributed per completion event.
 
 Baseline/ablation switches (used by benchmarks, mirroring the paper's
 comparisons): ``difficulty_metric`` (fisher | loss | length | random),
@@ -57,7 +67,7 @@ from repro.models.model_api import ModelFns
 from repro.optim import make_optimizer
 from repro.train.losses import make_logits_loss
 
-ENGINES = ("vectorized", "loop", "sharded")
+ENGINES = ("vectorized", "loop", "sharded", "async")
 
 # Compiled programs shared across FibecFed instances. Runners built on the
 # same model/loss_fn objects (every baseline preset in a comparison, both
@@ -79,7 +89,11 @@ def clear_compile_caches() -> None:
 
     The memo intentionally pins loss functions, models, and XLA executables
     for the process lifetime; a long-lived sweep over many models can call
-    this between models to bound resident memory.
+    this between models to bound resident memory. This covers every engine's
+    programs — including the async engine's per-client train programs
+    (``"client_train"`` keys) and the standalone buffered-merge program
+    (``"gal_merge"``), whose donated client buffers must never outlive a
+    cache clear (see ``tests/test_async_agg.py``'s re-init regression test).
     """
     from repro.train import losses as _losses
 
@@ -131,6 +145,8 @@ class FibecFed:
         sparse_update: bool = True,
         engine: str = "vectorized",
         mesh: Optional[Any] = None,
+        scenario: Optional[Any] = None,
+        async_cfg: Optional[Any] = None,
         seed: int = 0,
     ):
         if engine not in ENGINES:
@@ -141,6 +157,10 @@ class FibecFed:
             mesh = mesh if mesh is not None else make_client_mesh()
         elif mesh is not None:
             raise ValueError("mesh= is only meaningful with engine='sharded'")
+        if engine != "async" and (scenario is not None or async_cfg is not None):
+            raise ValueError(
+                "scenario=/async_cfg= are only meaningful with engine='async'"
+            )
         self.mesh = mesh
         self.model = model
         self.cfg = model.cfg
@@ -152,6 +172,7 @@ class FibecFed:
         self.engine = engine
         self.rng = np.random.default_rng(seed)
         self.key = jax.random.PRNGKey(seed)
+        self._seed = seed
 
         self.params = model.init_params(jax.random.fold_in(self.key, 0))
         init_lora = model.init_lora(jax.random.fold_in(self.key, 1))
@@ -172,6 +193,15 @@ class FibecFed:
 
         vectorized = engine in ("vectorized", "sharded")
         self._stacked_engine = vectorized
+        self._async = engine == "async"
+        if self._async:
+            from repro.federated.async_agg import AsyncAggConfig, DoubleBufferedGlobal
+            from repro.federated.hetero import get_scenario
+
+            self.scenario = get_scenario(scenario)
+            self.async_cfg = async_cfg if async_cfg is not None else AsyncAggConfig()
+            self._global = DoubleBufferedGlobal(self.global_lora)
+            self._scheduler = None  # built lazily on the first async round
         self.clients: List[ClientState] = []
         for cd in client_data:
             n = len(next(iter(cd.values())))
@@ -188,6 +218,15 @@ class FibecFed:
                     opt_state=None if vectorized else self.opt_init(init_lora),
                 )
             )
+
+        if self._async:
+            # per-client concrete LoRA/opt state (like the loop engine), but
+            # data on the padded fixed-shape grid: every client's (NB, B, ...)
+            # row has the same shape, so one compiled per-client scan program
+            # (per step-count bucket) serves the whole population
+            stack = stack_clients(client_data, fl.batch_size)
+            self._stack_data = {k_: jnp.asarray(v) for k_, v in stack.data.items()}
+            self._sample_valid = jnp.asarray(stack.sample_valid)
 
         if vectorized:
             C = len(self.clients)
@@ -234,6 +273,9 @@ class FibecFed:
 
         # bytes accounting (paper §5.6): LoRA params up+down per round
         self.comm_bytes_per_round: List[int] = []
+        # sync engines record (chosen, client_steps) per round so benchmarks
+        # can price the round barrier under a hetero.ScenarioPreset
+        self.last_round_info: Optional[Dict[str, np.ndarray]] = None
 
     # ------------------------------------------------------------------
     # jitted primitives (loop engine + shared)
@@ -341,6 +383,25 @@ class FibecFed:
             ("round", loss_fn, self.optimizer_name, use_mask),
             lambda: eng.build_round_fn(loss_fn, opt_update, use_neuron_mask=use_mask),
         )
+
+    # async-engine programs ----------------------------------------------
+
+    def _client_train_fn(self):
+        """Per-client jitted local round (async engine): scan over the
+        client's curriculum steps with no vmap barrier. Memoized like every
+        other program so ``clear_compile_caches`` covers it."""
+        loss_fn, opt_update = self.loss_fn, self.opt_update
+        use_mask = self.sparse_update and self.clients[0].neuron_mask is not None
+        return _memo(
+            ("client_train", loss_fn, self.optimizer_name, use_mask),
+            lambda: eng.build_client_train_fn(
+                loss_fn, opt_update, use_neuron_mask=use_mask
+            ),
+        )
+
+    def _merge_fn(self):
+        """Standalone fused GAL merge (async buffer flush)."""
+        return _memo(("gal_merge",), eng.build_merge_fn)
 
     # ------------------------------------------------------------------
     # initialization phase (Alg. 1 lines 1-10)
@@ -544,8 +605,10 @@ class FibecFed:
             lambda g, l, mm: mm * g + (1.0 - mm) * l, self.global_lora, client.lora, m
         )
 
-    def _gal_bytes(self, k: int) -> int:
-        """comm accounting: GAL LoRA up+down per participating device.
+    def _gal_bytes_per_client(self) -> int:
+        """comm accounting for ONE completion event: GAL LoRA down (pull) +
+        up (push). The async engine attributes bytes per completion — a
+        dropped client that never reports back contributes nothing.
 
         The mask is fixed after init_phase; sum it once, not every round
         (each ``float()`` is a device sync on the round's critical path).
@@ -557,9 +620,15 @@ class FibecFed:
                     for mm in jax.tree.leaves(self._gal_mask_tree)
                 )
             )
-        return 2 * k * self._gal_bytes_cache
+        return 2 * self._gal_bytes_cache
+
+    def _gal_bytes(self, k: int) -> int:
+        """Synchronous-round comm: k cohort members, one round trip each."""
+        return k * self._gal_bytes_per_client()
 
     def run_round(self, t: int, lr: Optional[float] = None) -> Dict[str, float]:
+        if self._async:
+            return self._run_round_async(t, lr)
         if self._stacked_engine:
             return self._run_round_vectorized(t, lr)
         return self._run_round_loop(t, lr)
@@ -588,6 +657,12 @@ class FibecFed:
                     losses.append(float(loss))
             updates.append(client.lora)
             weights.append(client.n)
+        # for scenario replay (benchmarks price the sync barrier): who ran,
+        # and how many real local steps each took
+        self.last_round_info = {
+            "chosen": np.asarray(chosen),
+            "client_steps": np.asarray(sel_counts) * fl.local_epochs,
+        }
 
         # --- server aggregation over GAL (line 18, FedAvg) ---
         w = np.asarray(weights, np.float64)
@@ -658,6 +733,10 @@ class FibecFed:
         valid = step_valid.T
         mean_loss = float(np.sum(losses * valid) / max(np.sum(valid), 1.0))
 
+        self.last_round_info = {
+            "chosen": np.asarray(chosen[:k]),
+            "client_steps": step_valid[:k].sum(axis=1).astype(np.int64),
+        }
         self.comm_bytes_per_round.append(self._gal_bytes(k))
         return {
             "loss": mean_loss,
@@ -670,6 +749,133 @@ class FibecFed:
                 )
             ),
             "comm_bytes": float(self.comm_bytes_per_round[-1]),
+            # compiled step-shape of this round (pow2-bucketed): the
+            # curriculum-bucketing test asserts few distinct values per ramp
+            "padded_steps": float(batch_idx.shape[1]),
+        }
+
+    # ------------------------------------------------------------------
+    # async engine (event-driven, straggler-aware)
+    # ------------------------------------------------------------------
+
+    def _ensure_scheduler(self):
+        if self._scheduler is None:
+            from repro.federated.async_agg import AsyncScheduler
+            from repro.federated.hetero import SCENARIO_SEED_OFFSET
+
+            # scenario randomness rides its own stream so heterogeneity
+            # never perturbs cohort sampling (self.rng) equivalence
+            bound = self.scenario.bind(
+                len(self.clients), seed=self._seed + SCENARIO_SEED_OFFSET
+            )
+            self._scheduler = AsyncScheduler(
+                num_clients=len(self.clients),
+                cohort_size=min(self.fl.devices_per_round, len(self.clients)),
+                scenario=bound,
+                rng=self.rng,
+                cfg=self.async_cfg,
+            )
+        return self._scheduler
+
+    def _async_callbacks(self, lr):
+        """(plan, train) closures handed to the event scheduler."""
+        from repro.federated.async_agg import ClientUpdate
+
+        fl = self.fl
+        train_fn = self._client_train_fn()
+        use_mask = self.sparse_update and self.clients[0].neuron_mask is not None
+
+        def plan(ci: int, t: int) -> int:
+            sel = curr.selected_batch_ids(self.schedule, t, self.clients[ci].order)
+            return len(sel) * fl.local_epochs
+
+        def train(ci: int, t: int, version: int) -> ClientUpdate:
+            client = self.clients[ci]
+            batch_idx, step_valid = curr.step_plan(
+                self.schedule, t, [client.order], fl.local_epochs
+            )
+            mask_arg = client.neuron_mask if use_mask else jnp.zeros(())
+            new_lora, new_opt, losses = train_fn(
+                self.params,
+                self._global.front,  # the version this client pulls
+                client.lora,  # donated: the client trains in place
+                client.opt_state,  # donated
+                mask_arg,
+                self._gal_mask_tree,
+                {k_: v[ci] for k_, v in self._stack_data.items()},
+                self._sample_valid[ci],
+                jnp.asarray(batch_idx[0]),
+                jnp.asarray(step_valid[0]),
+                jnp.float32(lr),
+            )
+            client.lora, client.opt_state = new_lora, new_opt
+            n_steps = int(step_valid.sum())
+            return ClientUpdate(
+                client=ci,
+                lora=new_lora,
+                losses=losses,
+                step_valid=step_valid[0],
+                n_samples=client.n,
+                n_steps=n_steps,
+                n_selected=n_steps // fl.local_epochs,
+                pulled_version=version,
+                round_t=t,
+            )
+
+        return plan, train
+
+    def _run_round_async(self, t: int, lr: Optional[float] = None) -> Dict[str, float]:
+        """One buffer flush = one server round.
+
+        The scheduler advances its virtual clock (dispatching replacements,
+        absorbing drops) until any ``buffer_size`` clients have reported;
+        their GAL layers merge into a fresh double-buffered global with
+        staleness-discounted FedAvg weights. Comm bytes are attributed per
+        completion event, so dropped clients cost nothing and the
+        homogeneous full-cohort configuration reproduces the synchronous
+        engines' accounting exactly.
+        """
+        fl = self.fl
+        lr = fl.learning_rate if lr is None else lr
+        sched = self._ensure_scheduler()
+        plan, train = self._async_callbacks(lr)
+        result = sched.run_until_merge(t, plan, train)
+
+        stacked = jax.tree.map(
+            lambda *xs: jnp.stack(xs), *[u.lora for u in result.updates]
+        )
+        new_global = self._merge_fn()(
+            self._global.front,
+            self._gal_mask_tree,
+            stacked,
+            jnp.asarray(result.weights, jnp.float32),
+        )
+        self._global.publish(new_global)
+        self.global_lora = self._global.front
+
+        num = den = 0.0
+        for u in result.updates:
+            losses = np.asarray(u.losses, np.float64)
+            valid = np.asarray(u.step_valid, np.float64)
+            num += float(np.sum(losses * valid))
+            den += float(np.sum(valid))
+
+        self.comm_bytes_per_round.append(
+            result.completed * self._gal_bytes_per_client()
+        )
+        return {
+            "loss": num / max(den, 1.0),
+            "selected_batches": float(
+                np.mean([u.n_selected for u in result.updates])
+            ),
+            "comm_bytes": float(self.comm_bytes_per_round[-1]),
+            "virtual_time": float(result.clock),
+            "staleness_mean": float(result.staleness.mean()),
+            "merged_clients": float(result.completed),
+            "dropped_clients": float(result.dropped),
+            "padded_steps": float(
+                max(len(np.asarray(u.step_valid)) for u in result.updates)
+            ),
         }
 
     # ------------------------------------------------------------------

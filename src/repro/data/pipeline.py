@@ -16,6 +16,18 @@ from typing import Dict, Iterator, List, Optional, Sequence
 import numpy as np
 
 
+def bucket_size(n: int) -> int:
+    """Round a padded step/batch count up to the next power of two (>= 1).
+
+    The curriculum ramp grows the per-round selected-batch count by a few
+    batches per round; every distinct padded step count S compiles a fresh
+    round program. Bucketing S to powers of two caps the whole ramp at
+    ``log2(S_max) + 1`` distinct compiles, and the extra padded steps are
+    exact no-ops (masked by ``step_valid``), so numerics are unchanged.
+    """
+    return 1 << max(0, int(n) - 1).bit_length()
+
+
 def make_batches(n: int, batch_size: int, *, drop_remainder: bool = False) -> List[np.ndarray]:
     """Contiguous index batches [0..n). The FL sim scores/sorts these."""
     ids = np.arange(n)

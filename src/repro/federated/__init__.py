@@ -1,1 +1,16 @@
+from repro.federated.async_agg import (
+    AsyncAggConfig,
+    AsyncScheduler,
+    ClientUpdate,
+    DoubleBufferedGlobal,
+    MergeResult,
+    staleness_weights,
+)
 from repro.federated.baselines import BASELINES, make_runner, run_experiment
+from repro.federated.hetero import (
+    SCENARIOS,
+    BoundScenario,
+    ScenarioPreset,
+    get_scenario,
+    sync_round_time,
+)

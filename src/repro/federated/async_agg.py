@@ -1,0 +1,317 @@
+"""Event-driven async aggregation: buffered, staleness-weighted GAL FedAvg.
+
+The synchronous engines (loop / vectorized / sharded) barrier every round on
+the slowest chosen client. This module removes the barrier FedBuff-style
+(Nguyen et al., "Federated Learning with Buffered Asynchronous Aggregation"):
+
+* the **scheduler** (:class:`AsyncScheduler`) runs a virtual clock over a
+  priority queue of per-client completion events. It tops the in-flight set
+  up to a target concurrency at the start of each merge cycle (and whenever
+  the event queue drains, e.g. after a run of drops) — deliberately NOT on
+  every completion, which is what keeps the degenerate configuration's RNG
+  consumption identical to the synchronous engines' one cohort draw per
+  round. Each dispatched client pulls the *current* global GAL LoRA
+  (recording its version), trains its curriculum steps locally, and reports
+  back after a scenario-dependent virtual latency
+  (:mod:`repro.federated.hetero` — speed skew, jitter, drops, bursts);
+* the **server** buffers completed updates. Once any ``buffer_size`` (K)
+  clients have reported, it merges their GAL-selected LoRA layers into the
+  global with weights ``n_i * (1 + staleness_i) ** -staleness_power``
+  (normalized over the buffer), where ``staleness_i`` is the number of
+  merges the global has absorbed since client ``i`` pulled. Stragglers keep
+  training against the version they pulled — their updates land late,
+  downweighted, instead of stalling everyone;
+* the global is **double-buffered** (:class:`DoubleBufferedGlobal`): merges
+  publish a fresh front buffer while the previous version stays alive for
+  in-flight clients that pulled it, mirroring the real system where the
+  server cannot overwrite a tensor a straggler is still training against.
+
+Clients in flight or awaiting aggregation are excluded from re-dispatch, so
+one client never holds two pending updates (this is also what keeps the
+jitted per-client train program free to donate its LoRA/optimizer buffers).
+
+Degenerate configuration = synchronous FedAvg: under the homogeneous
+scenario with ``buffer_size == concurrency == cohort size``, every wave
+pulls the same version (staleness 0), the buffer flushes exactly once per
+wave with sample-count weights, and the merge reproduces the synchronous
+engines' round — CI enforces allclose equivalence against ``engine="loop"``
+in ``tests/test_engine_equivalence.py``.
+
+The scheduler is deliberately decoupled from FibecFed: it knows nothing
+about JAX or LoRA trees, only ``plan``/``train`` callbacks and opaque update
+payloads, so its event logic (drop handling, buffer flushes, staleness
+bookkeeping) is unit-testable without a model
+(``tests/test_async_agg.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from typing import Any, Callable, Generic, List, Optional, Sequence, Set, TypeVar
+
+import numpy as np
+
+from repro.federated.hetero import BoundScenario
+
+T = TypeVar("T")
+
+
+@dataclasses.dataclass(frozen=True)
+class AsyncAggConfig:
+    """Server-side knobs of the buffered async aggregator.
+
+    ``buffer_size`` (K) — completions per merge; ``concurrency`` (M) — target
+    clients in flight. Both default to the cohort size
+    (``FibecFedConfig.devices_per_round``), the synchronous-equivalent
+    configuration. ``staleness_power`` is the exponent a of the FedBuff-style
+    discount ``s(tau) = (1 + tau) ** -a`` (0.5 in the FedBuff paper; 0
+    disables staleness weighting entirely).
+
+    Note the discount is *relative within one buffer* (weights renormalize
+    to 1 over the K merged updates, preserving the value-merge FedAvg
+    invariant): a stale update loses influence to fresher buffer-mates, but
+    with K=1 every flush has weight 1.0 regardless of staleness. Absolute
+    staleness damping needs delta-based merges with a server learning rate
+    (FedAsync-style) — a ROADMAP follow-on.
+    """
+
+    buffer_size: Optional[int] = None
+    concurrency: Optional[int] = None
+    staleness_power: float = 0.5
+
+    def __post_init__(self):
+        if self.buffer_size is not None and self.buffer_size < 1:
+            raise ValueError("buffer_size must be >= 1")
+        if self.concurrency is not None and self.concurrency < 1:
+            raise ValueError("concurrency must be >= 1")
+        if self.staleness_power < 0.0:
+            raise ValueError("staleness_power must be >= 0")
+
+
+def staleness_weights(
+    n_samples: Sequence[float], staleness: Sequence[int], power: float
+) -> np.ndarray:
+    """Normalized merge weights: FedAvg's sample counts x staleness discount.
+
+    ``w_i \\propto n_i * (1 + tau_i) ** -power``, normalized to sum to 1 over
+    the buffer. With every ``tau_i == 0`` this is exactly the synchronous
+    engines' ``n_i / sum(n)`` FedAvg weighting (same float64 arithmetic).
+    """
+    n = np.asarray(n_samples, np.float64)
+    tau = np.asarray(staleness, np.float64)
+    if np.any(tau < 0):
+        raise ValueError("staleness must be non-negative")
+    w = n * (1.0 + tau) ** -power
+    total = w.sum()
+    if not total > 0:
+        raise ValueError("merge weights sum to zero (empty or zero-sample buffer)")
+    return w / total
+
+
+class DoubleBufferedGlobal(Generic[T]):
+    """Front/back buffer pair for the server's global GAL LoRA.
+
+    ``front`` is the version served to new pulls; ``publish`` retires it to
+    ``back`` (still referenced by stragglers that pulled it) and installs the
+    merge result. Versions count published merges — the unit staleness is
+    measured in.
+    """
+
+    def __init__(self, value: T):
+        self.front: T = value
+        self.back: Optional[T] = None
+        self.version: int = 0
+
+    def publish(self, new: T) -> None:
+        self.back, self.front = self.front, new
+        self.version += 1
+
+
+@dataclasses.dataclass
+class ClientUpdate:
+    """One completed local round, as buffered by the server.
+
+    The scheduler itself only reads ``client`` (re-dispatch exclusion),
+    ``n_samples`` (FedAvg weight), ``n_steps`` (latency pricing) and
+    ``pulled_version`` (staleness); the rest rides along to the runner's
+    merge and stats.
+    """
+
+    client: int
+    lora: Any  # trained client LoRA tree (GAL part merged at flush)
+    losses: Any  # (S,) per-step training losses, padded steps included
+    step_valid: Any  # (S,) f32 mask of real (non-padded) steps
+    n_samples: int
+    n_steps: int  # real curriculum steps (prices virtual latency)
+    n_selected: int  # curriculum-selected batches at dispatch round
+    pulled_version: int
+    round_t: int  # server round at dispatch time
+
+
+@dataclasses.dataclass
+class _Event:
+    """One scheduled client outcome on the virtual clock.
+
+    ``seq`` breaks time ties FIFO (dispatch order), which is what makes the
+    homogeneous scenario — where a whole wave completes at the same instant —
+    deterministic and equal to the synchronous engines' client order
+    up to merge commutativity.
+    """
+
+    time: float
+    seq: int
+    kind: str  # "complete" | "drop"
+    client: int
+    payload: Any = None
+
+    def __lt__(self, other: "_Event") -> bool:
+        return (self.time, self.seq) < (other.time, other.seq)
+
+
+@dataclasses.dataclass
+class MergeResult:
+    """One buffer flush: the updates to merge and their final weights."""
+
+    updates: List[Any]  # opaque payloads from the train callback
+    weights: np.ndarray  # (K,) normalized staleness-discounted weights
+    staleness: np.ndarray  # (K,) int merges-behind per update
+    clock: float  # virtual time of the flush
+    version: int  # global version after this merge is published
+    completed: int  # completions consumed by this flush
+    dropped: int  # drops observed since the previous flush
+
+
+class AsyncScheduler:
+    """Virtual-clock event loop driving dispatch, drops, and buffer flushes.
+
+    ``plan(client, round_t) -> n_steps`` prices a dispatch (curriculum step
+    count) without training — used for drop timing. ``train(client, round_t,
+    version) -> payload`` runs the actual local round; the payload must
+    expose ``n_samples`` (FedAvg weight), ``n_steps`` (latency pricing) and
+    ``pulled_version`` attributes, and is otherwise opaque.
+
+    ``rng`` is the *cohort sampling* stream. When the whole population is
+    available a wave consumes it exactly like the synchronous engines' <<one
+    ``choice(num_clients, k)`` per round>>, so equivalence holds seed-for-
+    seed; scenario randomness lives on the BoundScenario's own stream.
+    """
+
+    def __init__(
+        self,
+        *,
+        num_clients: int,
+        cohort_size: int,
+        scenario: BoundScenario,
+        rng: np.random.Generator,
+        cfg: Optional[AsyncAggConfig] = None,
+    ):
+        cfg = cfg or AsyncAggConfig()
+        self.num_clients = num_clients
+        self.buffer_size = cfg.buffer_size or cohort_size
+        self.concurrency = cfg.concurrency or cohort_size
+        if not 1 <= self.buffer_size <= num_clients:
+            raise ValueError(
+                f"buffer_size must be in [1, {num_clients}], got {self.buffer_size}"
+            )
+        if not 1 <= self.concurrency <= num_clients:
+            raise ValueError(
+                f"concurrency must be in [1, {num_clients}], got {self.concurrency}"
+            )
+        self.staleness_power = cfg.staleness_power
+        self.scenario = scenario
+        self.rng = rng
+        self.clock = 0.0
+        self.version = 0
+        self.in_flight: Set[int] = set()
+        self.buffer: List[Any] = []
+        self.last_merge_weights: Optional[np.ndarray] = None
+        self.total_completed = 0
+        self.total_dropped = 0
+        self._dropped_since_flush = 0
+        self._heap: List[_Event] = []
+        self._seq = itertools.count()
+
+    # -- dispatch ----------------------------------------------------------
+
+    def _available(self) -> List[int]:
+        busy = self.in_flight | {u.client for u in self.buffer}
+        return [c for c in range(self.num_clients) if c not in busy]
+
+    def _dispatch(self, round_t: int, plan: Callable, train: Callable) -> int:
+        """Top the in-flight set up to ``concurrency``; returns #dispatched."""
+        want = self.concurrency - len(self.in_flight)
+        if want <= 0:
+            return 0
+        avail = self._available()
+        count = min(want, len(avail))
+        if count <= 0:
+            return 0
+        if len(avail) == self.num_clients:
+            # same RNG call as the synchronous engines' cohort sampling
+            chosen = self.rng.choice(self.num_clients, count, replace=False)
+        else:
+            chosen = self.rng.choice(np.asarray(avail), count, replace=False)
+        start = self.scenario.dispatch_time(self.clock)
+        for ci in np.atleast_1d(chosen):
+            ci = int(ci)
+            self.in_flight.add(ci)
+            if self.scenario.is_dropped(ci):
+                # the device does the work but never reports back
+                done = start + self.scenario.round_trip_time(ci, plan(ci, round_t))
+                ev = _Event(done, next(self._seq), "drop", ci)
+            else:
+                payload = train(ci, round_t, self.version)
+                done = start + self.scenario.round_trip_time(ci, payload.n_steps)
+                ev = _Event(done, next(self._seq), "complete", ci, payload)
+            heapq.heappush(self._heap, ev)
+        return count
+
+    # -- event loop --------------------------------------------------------
+
+    def run_until_merge(
+        self, round_t: int, plan: Callable, train: Callable
+    ) -> MergeResult:
+        """Advance the virtual clock until the buffer flushes once."""
+        self._dispatch(round_t, plan, train)
+        while True:
+            if not self._heap:
+                if not self._dispatch(round_t, plan, train):
+                    raise RuntimeError(
+                        "async scheduler stalled: no events and no "
+                        "dispatchable clients (buffer_size too large for "
+                        "the population?)"
+                    )
+                continue
+            ev = heapq.heappop(self._heap)
+            self.clock = max(self.clock, ev.time)
+            self.in_flight.discard(ev.client)
+            if ev.kind == "drop":
+                self.total_dropped += 1
+                self._dropped_since_flush += 1
+                continue
+            self.buffer.append(ev.payload)
+            self.total_completed += 1
+            if len(self.buffer) >= self.buffer_size:
+                return self._flush()
+
+    def _flush(self) -> MergeResult:
+        updates, self.buffer = self.buffer, []
+        staleness = np.asarray(
+            [self.version - u.pulled_version for u in updates], np.int64
+        )
+        weights = staleness_weights(
+            [u.n_samples for u in updates], staleness, self.staleness_power
+        )
+        self.version += 1
+        self.last_merge_weights = weights
+        dropped, self._dropped_since_flush = self._dropped_since_flush, 0
+        return MergeResult(
+            updates=updates,
+            weights=weights,
+            staleness=staleness,
+            clock=self.clock,
+            version=self.version,
+            completed=len(updates),
+            dropped=dropped,
+        )

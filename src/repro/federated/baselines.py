@@ -52,6 +52,8 @@ def make_runner(
     optimizer: str = "sgd",
     engine: str = "vectorized",
     mesh: Any = None,
+    scenario: Any = None,
+    async_cfg: Any = None,
 ) -> FibecFed:
     preset = dict(BASELINES[name])
     curriculum = preset.pop("curriculum", None)
@@ -61,7 +63,8 @@ def make_runner(
         fl = dataclasses.replace(fl, curriculum=curriculum)
     return FibecFed(
         model, loss_fn, fl, client_data, seed=seed, optimizer=optimizer,
-        engine=engine, mesh=mesh, **preset
+        engine=engine, mesh=mesh, scenario=scenario, async_cfg=async_cfg,
+        **preset
     )
 
 

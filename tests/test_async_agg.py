@@ -1,0 +1,392 @@
+"""Async aggregation subsystem: scheduler events, staleness weighting,
+scenario presets, curriculum step bucketing, and compile-cache hygiene.
+
+The scheduler tests drive :class:`repro.federated.async_agg.AsyncScheduler`
+with stub (non-JAX) payloads — its event logic (drop handling, buffer
+flushes, staleness bookkeeping, re-dispatch exclusion) is model-free by
+design. Integration against real models lives in
+``tests/test_engine_equivalence.py``.
+"""
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.curriculum import CurriculumSchedule, step_plan
+from repro.data.pipeline import bucket_size
+from repro.federated.async_agg import (
+    AsyncAggConfig,
+    AsyncScheduler,
+    DoubleBufferedGlobal,
+    staleness_weights,
+)
+from repro.federated.hetero import (
+    SCENARIOS,
+    ScenarioPreset,
+    get_scenario,
+    sync_round_time,
+)
+
+
+# ---------------------------------------------------------------------------
+# staleness weighting invariants
+# ---------------------------------------------------------------------------
+
+
+def test_staleness_weights_normalized():
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        n = rng.integers(1, 50, size=6)
+        tau = rng.integers(0, 10, size=6)
+        w = staleness_weights(n, tau, power=0.5)
+        assert w.shape == (6,)
+        assert np.all(w > 0)
+        assert w.sum() == pytest.approx(1.0)
+
+
+def test_staleness_weights_zero_staleness_is_fedavg():
+    n = np.array([10, 30, 60])
+    w = staleness_weights(n, [0, 0, 0], power=0.5)
+    np.testing.assert_allclose(w, n / n.sum())
+
+
+def test_staleness_weights_discount_monotone():
+    # same sample count, increasing staleness => strictly decreasing weight
+    w = staleness_weights([10, 10, 10], [0, 1, 4], power=0.5)
+    assert w[0] > w[1] > w[2]
+    # power 0 disables the discount entirely
+    w0 = staleness_weights([10, 10, 10], [0, 1, 4], power=0.0)
+    np.testing.assert_allclose(w0, [1 / 3] * 3)
+
+
+def test_staleness_weights_rejects_bad_inputs():
+    with pytest.raises(ValueError):
+        staleness_weights([1, 1], [0, -1], power=0.5)
+    with pytest.raises(ValueError):
+        staleness_weights([0, 0], [0, 0], power=0.5)
+
+
+# ---------------------------------------------------------------------------
+# scenario presets
+# ---------------------------------------------------------------------------
+
+
+def test_scenario_registry_and_lookup():
+    assert get_scenario(None).name == "uniform"
+    assert get_scenario("straggler").slow_factor >= 4.0
+    preset = ScenarioPreset(name="custom", slow_factor=2.0, slow_fraction=0.5)
+    assert get_scenario(preset) is preset
+    with pytest.raises(ValueError):
+        get_scenario("nope")
+    for name, p in SCENARIOS.items():
+        assert p.name == name
+
+
+def test_scenario_validation():
+    with pytest.raises(ValueError):
+        ScenarioPreset(name="bad", slow_factor=0.5)
+    with pytest.raises(ValueError):
+        ScenarioPreset(name="bad", slow_fraction=1.5)
+    with pytest.raises(ValueError):
+        ScenarioPreset(name="bad", dropout_prob=1.0)
+
+
+def test_scenario_compose_takes_worst_case():
+    a = ScenarioPreset(name="a", slow_fraction=0.25, slow_factor=4.0)
+    b = ScenarioPreset(name="b", dropout_prob=0.2, comm_latency=1.0)
+    c = a.compose(b)
+    assert c.name == "a+b"
+    assert c.slow_factor == 4.0 and c.dropout_prob == 0.2 and c.comm_latency == 1.0
+
+
+def test_bound_scenario_speed_assignment_and_timing():
+    bound = get_scenario("straggler").bind(num_clients=8, seed=0)
+    assert sorted(set(bound.speed)) == [1.0, 4.0]
+    assert (bound.speed == 4.0).sum() == 2  # 25% of 8
+    # deterministic re-bind
+    bound2 = get_scenario("straggler").bind(num_clients=8, seed=0)
+    np.testing.assert_array_equal(bound.speed, bound2.speed)
+    slow = int(np.argmax(bound.speed))
+    fast = int(np.argmin(bound.speed))
+    assert bound.compute_time(slow, 5) == pytest.approx(
+        4.0 * bound.compute_time(fast, 5)
+    )
+    # uniform scenario consumes no RNG (jitter/dropout skipped)
+    uni = get_scenario("uniform").bind(4, seed=1)
+    state = uni.rng.bit_generator.state["state"].copy()
+    uni.compute_time(0, 3)
+    assert not uni.is_dropped(0)
+    assert uni.rng.bit_generator.state["state"] == state
+
+
+def test_burst_dispatch_alignment():
+    bound = ScenarioPreset(name="b", burst_period=8.0).bind(4, seed=0)
+    assert bound.dispatch_time(0.0) == 0.0
+    assert bound.dispatch_time(0.1) == 8.0
+    assert bound.dispatch_time(8.0) == 8.0
+    assert bound.dispatch_time(8.5) == 16.0
+
+
+def test_sync_round_time_is_the_barrier():
+    bound = get_scenario("straggler").bind(8, seed=0)
+    chosen = [int(np.argmax(bound.speed)), int(np.argmin(bound.speed))]
+    t = sync_round_time(bound, chosen, [3, 3])
+    assert t == pytest.approx(bound.round_trip_time(chosen[0], 3))
+
+
+# ---------------------------------------------------------------------------
+# scheduler event loop (stub payloads, no JAX)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class StubUpdate:
+    client: int
+    n_samples: int
+    n_steps: int
+    pulled_version: int
+    round_t: int
+
+
+def make_stub_callbacks(trained, n_steps=3):
+    def plan(ci, t):
+        return n_steps
+
+    def train(ci, t, version):
+        u = StubUpdate(
+            client=ci, n_samples=10 + ci, n_steps=n_steps,
+            pulled_version=version, round_t=t,
+        )
+        trained.append(u)
+        return u
+
+    return plan, train
+
+
+def make_scheduler(preset, *, num_clients=8, cohort=4, seed=0, **cfg_kw):
+    return AsyncScheduler(
+        num_clients=num_clients,
+        cohort_size=cohort,
+        scenario=get_scenario(preset).bind(num_clients, seed=seed),
+        rng=np.random.default_rng(seed),
+        cfg=AsyncAggConfig(**cfg_kw) if cfg_kw else None,
+    )
+
+
+def test_scheduler_homogeneous_wave_matches_sync_sampling():
+    """Under the uniform scenario the scheduler consumes the cohort RNG
+    exactly like the synchronous engines: one choice(C, k) per round."""
+    sched = make_scheduler("uniform", seed=13)
+    trained = []
+    plan, train = make_stub_callbacks(trained)
+    ref = np.random.default_rng(13)
+    for t in range(3):
+        result = sched.run_until_merge(t, plan, train)
+        expect = ref.choice(8, 4, replace=False)
+        got = [u.client for u in result.updates]
+        assert sorted(got) == sorted(int(c) for c in expect)
+        assert result.completed == 4 and result.dropped == 0
+        np.testing.assert_array_equal(result.staleness, 0)
+        assert result.weights.sum() == pytest.approx(1.0)
+
+
+def test_scheduler_dropped_clients_never_contribute():
+    sched = make_scheduler("dropout", seed=5, buffer_size=3)
+    sched.scenario.preset = sched.scenario.preset.with_(dropout_prob=0.4)
+    trained = []
+    plan, train = make_stub_callbacks(trained)
+    merged_clients = []
+    for t in range(6):
+        result = sched.run_until_merge(t, plan, train)
+        assert len(result.updates) == 3
+        merged_clients += [u.client for u in result.updates]
+        assert result.weights.sum() == pytest.approx(1.0)
+    assert sched.total_dropped > 0  # the scenario really dropped someone
+    # every merged update came from a completed train() call — drops are
+    # scheduled via plan() only and never produce a payload
+    trained_ids = {id(u) for u in trained}
+    assert all(id(u) in trained_ids for u in result.updates)
+    assert sched.total_completed == len(merged_clients)
+
+
+def test_scheduler_staleness_counts_merges_since_pull():
+    """A 10x straggler pulls v0, then the fast client cycles 9 merges past
+    it; when the straggler finally lands its staleness is the merge count
+    since its pull."""
+    preset = ScenarioPreset(name="skew", slow_fraction=0.5, slow_factor=10.0)
+    sched = make_scheduler(preset, num_clients=2, cohort=2, seed=0, buffer_size=1)
+    trained = []
+    plan, train = make_stub_callbacks(trained)  # 3 steps => fast 3s, slow 30s
+    results = [sched.run_until_merge(t, plan, train) for t in range(10)]
+    fast_ci = int(np.argmin(sched.scenario.speed))
+    slow_ci = int(np.argmax(sched.scenario.speed))
+    for r in results[:9]:  # merges at t=3,6,...,27: the fast client cycling
+        assert [u.client for u in r.updates] == [fast_ci]
+        assert list(r.staleness) == [0]
+    slow_merge = results[9]  # t=30: the straggler, 9 merges behind its pull
+    assert [u.client for u in slow_merge.updates] == [slow_ci]
+    assert list(slow_merge.staleness) == [9]
+    assert slow_merge.updates[0].pulled_version == 0
+    assert slow_merge.weights.sum() == pytest.approx(1.0)
+    assert sched.version == 10
+
+
+def test_scheduler_no_client_holds_two_pending_updates():
+    """In-flight and buffered clients are excluded from re-dispatch (this is
+    what licenses the per-client program's buffer donation)."""
+    preset = ScenarioPreset(name="skew", slow_fraction=0.5, slow_factor=16.0)
+    sched = make_scheduler(preset, num_clients=6, cohort=4, seed=3, buffer_size=2)
+    plan, train = make_stub_callbacks([])
+    for t in range(8):
+        sched.run_until_merge(t, plan, train)
+        busy = [u.client for u in sched.buffer] + sorted(sched.in_flight)
+        assert len(busy) == len(set(busy))
+
+
+def test_scheduler_rejects_impossible_buffer():
+    with pytest.raises(ValueError):
+        make_scheduler("uniform", num_clients=4, cohort=2, buffer_size=5)
+    with pytest.raises(ValueError):
+        AsyncAggConfig(buffer_size=0)
+    with pytest.raises(ValueError):
+        AsyncAggConfig(staleness_power=-1.0)
+
+
+def test_double_buffered_global_publish():
+    db = DoubleBufferedGlobal("v0")
+    assert db.front == "v0" and db.back is None and db.version == 0
+    db.publish("v1")
+    assert (db.front, db.back, db.version) == ("v1", "v0", 1)
+    db.publish("v2")
+    assert (db.front, db.back, db.version) == ("v2", "v1", 2)
+
+
+# ---------------------------------------------------------------------------
+# curriculum step bucketing (pow2 compile reuse)
+# ---------------------------------------------------------------------------
+
+
+def test_bucket_size_pow2():
+    assert [bucket_size(n) for n in (1, 2, 3, 4, 5, 8, 9, 37)] == [
+        1, 2, 4, 4, 8, 8, 16, 64,
+    ]
+    assert bucket_size(0) == 1
+
+
+def test_step_plan_bucketing_caps_distinct_compiles():
+    """A full curriculum ramp must produce at most log2(S_max)+1 distinct
+    padded step counts — each distinct count is one retrace of the jitted
+    round program."""
+    sched = CurriculumSchedule(strategy="linear", beta=0.25, alpha=0.8, total_rounds=40)
+    order = np.arange(37)
+    bucketed = {step_plan(sched, t, [order])[0].shape[1] for t in range(40)}
+    raw = {step_plan(sched, t, [order], bucket=False)[0].shape[1] for t in range(40)}
+    s_max = bucket_size(37)
+    assert len(bucketed) <= math.log2(s_max) + 1
+    assert len(bucketed) < len(raw)  # bucketing actually coalesced shapes
+    # padded plans replay the same real steps: valid-step counts unchanged
+    for t in (0, 20, 39):
+        bi_b, sv_b = step_plan(sched, t, [order])
+        bi_r, sv_r = step_plan(sched, t, [order], bucket=False)
+        assert sv_b.sum() == sv_r.sum()
+        np.testing.assert_array_equal(
+            bi_b[0][sv_b[0] > 0], bi_r[0][sv_r[0] > 0]
+        )
+
+
+def test_step_plan_bucketing_per_epoch_layout():
+    sched = CurriculumSchedule(strategy="none", total_rounds=4)
+    order = np.arange(3)
+    bi, sv = step_plan(sched, 0, [order], local_epochs=2)
+    assert bi.shape == (1, 8)  # 2 epochs x bucket(3)=4
+    np.testing.assert_array_equal(sv[0], [1, 1, 1, 0, 1, 1, 1, 0])
+    np.testing.assert_array_equal(bi[0][:3], bi[0][4:7])
+
+
+# ---------------------------------------------------------------------------
+# integration: real runners (tiny model)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def tiny_world():
+    from repro.config import FibecFedConfig, ModelConfig
+    from repro.data import dirichlet_partition, make_keyword_task
+    from repro.models import build_model
+    from repro.train import make_loss_fn
+
+    cfg = ModelConfig(
+        name="tiny-async", family="dense", num_layers=1, d_model=16, num_heads=2,
+        num_kv_heads=2, d_ff=32, vocab_size=256, head_dim=8, rope="full",
+        norm="rmsnorm", mlp="swiglu", dtype="float32", lora_rank=2, max_seq_len=32,
+    )
+    # 10 batches/client with beta=0.5 ramps selected counts 5..10 -> the
+    # bucketed step axis takes exactly the values {8, 16}
+    fl = FibecFedConfig(
+        num_devices=3, devices_per_round=2, rounds=8, batch_size=4,
+        learning_rate=5e-3, fim_warmup_epochs=1, gal_fraction=0.5,
+        sparse_ratio=0.5, beta_initial_ratio=0.5, alpha_full_data=0.8,
+    )
+    model = build_model(cfg)
+    task = make_keyword_task(n_samples=120, seq_len=8, vocab_size=256, seed=0)
+    parts = dirichlet_partition(task.data["label"], fl.num_devices, 100.0, seed=0)
+    client_data = [
+        {k: v[idx] for k, v in task.data.items() if k != "label"} for idx in parts
+    ]
+    return model, make_loss_fn(model), fl, client_data
+
+
+def test_full_ramp_compiles_stay_bucketed(tiny_world):
+    """A full curriculum ramp may retrace the round program at most
+    log2(S_max)+1 times (pow2 step buckets), for both the vectorized round
+    program and the async per-client program."""
+    from repro.federated import make_runner
+
+    model, loss_fn, fl, client_data = tiny_world
+    nb_max = max(
+        -(-len(next(iter(cd.values()))) // fl.batch_size) for cd in client_data
+    )
+    bound = math.log2(bucket_size(nb_max * fl.local_epochs)) + 1
+    for engine in ("vectorized", "async"):
+        runner = make_runner(
+            "fibecfed", model, loss_fn, fl, client_data, engine=engine, seed=0
+        )
+        runner.init_phase()
+        shapes = {runner.run_round(t)["padded_steps"] for t in range(fl.rounds)}
+        assert 1 < len(shapes) <= bound, (engine, shapes)
+        assert all(s == bucket_size(int(s)) for s in shapes), (engine, shapes)
+
+
+def test_cache_clear_then_reinit_recompiles_cleanly(tiny_world):
+    """Regression: ``clear_compile_caches`` must drop the async per-client
+    program and merge caches too — a runner re-initialized after a clear
+    (and a brand-new runner) must run without donated-buffer reuse errors
+    and keep producing finite losses."""
+    from repro.core.fibecfed import _PROGRAM_MEMO, clear_compile_caches
+    from repro.federated import make_runner
+
+    model, loss_fn, fl, client_data = tiny_world
+    r1 = make_runner(
+        "fibecfed", model, loss_fn, fl, client_data, engine="async", seed=4
+    )
+    r1.init_phase()
+    assert np.isfinite(r1.run_round(0)["loss"])
+    # the async programs really live in the shared memo...
+    kinds = {k[0] for k in _PROGRAM_MEMO}
+    assert "client_train" in kinds and "gal_merge" in kinds
+
+    clear_compile_caches()
+    assert not _PROGRAM_MEMO  # ...and the clear really removed them
+
+    # same runner, fresh programs: re-init + another round
+    r1.init_phase()
+    assert np.isfinite(r1.run_round(1)["loss"])
+
+    # brand-new runner after another clear
+    clear_compile_caches()
+    r2 = make_runner(
+        "fibecfed", model, loss_fn, fl, client_data, engine="async", seed=4
+    )
+    r2.init_phase()
+    assert np.isfinite(r2.run_round(0)["loss"])

@@ -104,3 +104,44 @@ def test_committed_baseline_is_loadable():
     for engine in ("loop", "vectorized", "sharded"):
         assert payload["engines"][engine]["rounds_per_s"] > 0
     assert payload["speedups"]["vectorized_over_loop"] > 0
+
+
+# --------------------------------------------------------------------------
+# async benchmark JSON (speedups-only payloads, no "engines" section)
+# --------------------------------------------------------------------------
+
+
+def _async_result(straggler=3.2, devices=8):
+    return {
+        "bench": "async",
+        "num_xla_devices": devices,
+        "speedups": {"async_over_sync/straggler": straggler},
+    }
+
+
+def test_async_payload_without_engines_compares(files):
+    cur = files("cur.json", _async_result(straggler=3.0))  # within 30%
+    base = files("base.json", _async_result())
+    assert bench_compare.main([cur, "--baseline", base]) == 0
+
+
+def test_async_speedup_regression_fails(files):
+    # async no longer beating sync under skew is exactly what the gate is for
+    cur = files("cur.json", _async_result(straggler=1.1))
+    base = files("base.json", _async_result())
+    assert bench_compare.main([cur, "--baseline", base]) == 1
+    assert bench_compare.main([cur, "--baseline", base, "--warn-only"]) == 0
+
+
+def test_committed_async_baseline_is_loadable():
+    path = pathlib.Path(__file__).resolve().parent.parent / "benchmarks" / "baselines" / "async.json"
+    payload = json.loads(path.read_text())
+    assert payload["bench"] == "async"
+    assert payload["num_xla_devices"] == 8  # the tier1-multidevice regime
+    for name in ("straggler", "mobile"):
+        sc = payload["scenarios"][name]
+        assert sc["async_reached_target"] is True
+        # the acceptance claim: async reaches the sync engine's target loss
+        # in strictly less virtual wall-clock under >= 4x speed skew
+        assert sc["async_virtual_time"] < sc["sync_virtual_time"]
+        assert payload["speedups"][f"async_over_sync/{name}"] > 1.0
