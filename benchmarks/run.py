@@ -7,6 +7,7 @@ Prints ``name,us_per_call,derived`` CSV. Modules:
   table5_selection — Table 5/6, App. G.2 (data-selection strategies)
   fig7_ablations   — §5.7, Fig. 7, Table 12 (curriculum/GAL/sparse/β)
   kernels_bench    — kernel reference-path micro-benchmarks
+  masked_update_bench — fused vs unfused masked optimizer update step
   async_bench      — sync vs async virtual wall-clock under device skew
   roofline         — §Roofline table from the dry-run artifacts
 
@@ -22,6 +23,7 @@ import traceback
 
 MODULES = [
     "kernels_bench",
+    "masked_update_bench",
     "fl_round_bench",
     "async_bench",
     "table1_accuracy",

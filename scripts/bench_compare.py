@@ -7,7 +7,10 @@ when anything regressed by more than ``--max-regression`` (default 30%).
 ``async_bench.py --json BENCH_async.json`` payloads gate the same way via
 their per-scenario async-over-sync virtual-time speedups (baseline
 ``benchmarks/baselines/async.json``; no ``engines`` section — only the
-``speedups`` block is compared).
+``speedups`` block is compared). ``masked_update_bench.py --json
+BENCH_masked_update.json`` gates its fused-over-unfused update speedups and
+the (deterministic, machine-independent) lowered-HLO buffer-reduction
+ratios against ``benchmarks/baselines/masked_update.json``.
 
 Absolute rounds/sec are machine-dependent, so on shared CI runners pass
 ``--warn-only``: every check still runs and prints, but regressions exit 0.
@@ -16,16 +19,20 @@ machines — a ratio regression on any host is a real signal — but only
 between runs with the same XLA device count (the sharded engine's ratio is
 structurally a function of it), so runs whose ``num_xla_devices`` differs
 from the baseline's are skipped (exit 0) unless ``--allow-device-mismatch``
-forces the comparison. The committed baseline is recorded under the CI
-regime (``REPRO_BENCH_HOST_DEVICES=8``).
+forces the comparison. Ratios in a ``speedups_device_independent`` block
+(e.g. the masked-update bench's lowered-HLO buffer-reduction counts, which
+no device count can change) are exempt from the skip and always gate. The
+committed baseline is recorded under the CI regime
+(``REPRO_BENCH_HOST_DEVICES=8``).
 
 Usage:
   python scripts/bench_compare.py BENCH_fl_round.json \
       [--baseline benchmarks/baselines/fl_round.json] \
       [--max-regression 0.30] [--warn-only] [--allow-device-mismatch]
 
-Exit codes: 0 ok (or --warn-only / skipped device mismatch), 1 regression,
-2 unusable inputs.
+Exit codes: 0 ok (or --warn-only / device mismatch with no device-
+independent metrics to check), 1 regression (including in the device-
+independent block on a mismatched run), 2 unusable inputs.
 
 No third-party imports — safe to run before the environment installs jax.
 """
@@ -48,6 +55,13 @@ def compare(current: dict, baseline: dict, max_regression: float) -> list:
     for name in sorted(set(cur_s) & set(base_s)):
         ratio = cur_s[name] / base_s[name] if base_s[name] else float("inf")
         checks.append((f"speedup/{name}", cur_s[name], base_s[name], ratio))
+    cur_i, base_i = (
+        current.get("speedups_device_independent", {}),
+        baseline.get("speedups_device_independent", {}),
+    )
+    for name in sorted(set(cur_i) & set(base_i)):
+        ratio = cur_i[name] / base_i[name] if base_i[name] else float("inf")
+        checks.append((f"speedup/{name}", cur_i[name], base_i[name], ratio))
     return [
         (name, c, b, ratio, ratio < 1.0 - max_regression)
         for name, c, b, ratio in checks
@@ -97,11 +111,29 @@ def main(argv=None) -> int:
         return 2
     if cur_dev != base_dev and not args.allow_device_mismatch:
         print(
-            f"bench_compare: skipped — run has {cur_dev} XLA devices, baseline"
-            f" {base_dev}; throughput and speedup ratios are not comparable"
-            " across device counts (--allow-device-mismatch to force)"
+            f"bench_compare: device-dependent metrics skipped — run has"
+            f" {cur_dev} XLA devices, baseline {base_dev}; throughput and"
+            " speedup ratios are not comparable across device counts"
+            " (--allow-device-mismatch to force); any"
+            " speedups_device_independent metrics still gate below"
         )
-        return 0
+        # device-independent ratios still gate: a regression there is real
+        # on any host, so the mismatch must not silently disable the check
+        current = {
+            "speedups_device_independent": current.get(
+                "speedups_device_independent", {}
+            )
+        }
+        baseline = {
+            "speedups_device_independent": baseline.get(
+                "speedups_device_independent", {}
+            )
+        }
+        if not (
+            set(current["speedups_device_independent"])
+            & set(baseline["speedups_device_independent"])
+        ):
+            return 0
 
     checks = compare(current, baseline, args.max_regression)
     if not checks:

@@ -52,7 +52,6 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import fisher as fish
 from repro.launch.mesh import dp_axes
-from repro.optim.optimizers import tree_where
 from repro.train.losses import masked_mean_loss
 
 
@@ -88,19 +87,24 @@ def _masked_loss(loss_fn: Callable) -> Callable:
 def make_client_step(loss_fn: Callable, opt_update: Callable) -> Callable:
     """One client's masked local SGD/AdamW step (Alg. 1 lines 16-17).
 
-    ``step(params, lora, opt, mask, batch, sample_valid, lr) -> (loss,
-    new_lora, new_opt)``. This is the shared inner body: the round program
-    vmaps it over the cohort, the async per-client train program scans it
-    without the vmap barrier — both therefore share numerics by
-    construction.
+    ``step(params, lora, opt, mask, batch, sample_valid, lr, active=None) ->
+    (loss, new_lora, new_opt)``. This is the shared inner body: the round
+    program vmaps it over the cohort, the async per-client train program
+    scans it without the vmap barrier — both therefore share numerics by
+    construction. ``active`` is the padded-step no-op predicate: the
+    optimizer commits per entry (``eff = mask ⊙ active``), so an inactive
+    step returns the carry unchanged — LoRA, moments, and Adam's step
+    counter — without the separate ``tree_where`` pass the engines used to
+    run over every leaf (and the fused kernels fold the predicate into their
+    single read/write pass).
     """
     masked = _masked_loss(loss_fn)
 
-    def one_step(params, lora, opt, mask, batch, sample_valid, lr):
+    def one_step(params, lora, opt, mask, batch, sample_valid, lr, active=None):
         loss, grads = jax.value_and_grad(
             lambda x: masked(params, x, batch, sample_valid)
         )(lora)
-        new_lora, new_opt = opt_update(grads, opt, lora, lr, mask)
+        new_lora, new_opt = opt_update(grads, opt, lora, lr, mask, active)
         return loss, new_lora, new_opt
 
     return one_step
@@ -180,8 +184,8 @@ def _round_body(
 
         client_step = make_client_step(loss_fn, opt_update)
 
-        def one_step(lo, op, mk, batch, sv):
-            return client_step(params, lo, op, mk, batch, sv, lr)
+        def one_step(lo, op, mk, batch, sv, act):
+            return client_step(params, lo, op, mk, batch, sv, lr, act)
 
         def step(carry, xs):
             lora_c, opt_c = carry
@@ -196,18 +200,17 @@ def _round_body(
             else:
                 batch = {kk: v[chosen, bidx] for kk, v in data.items()}
                 sv = sample_valid[chosen, bidx]
+            # padded steps compute but do not commit: the optimizer's
+            # ``active`` predicate holds LoRA, moments, and Adam's step
+            # counter in the same pass (exactly like the loop engine)
             if use_neuron_mask:
-                loss, new_lora, new_opt = jax.vmap(one_step)(
-                    lora_c, opt_c, cl_mask, batch, sv
+                loss, lora_c, opt_c = jax.vmap(one_step)(
+                    lora_c, opt_c, cl_mask, batch, sv, active
                 )
             else:
-                loss, new_lora, new_opt = jax.vmap(
-                    lambda lo, op, b, m: one_step(lo, op, None, b, m)
-                )(lora_c, opt_c, batch, sv)
-            # padded steps compute but do not commit (optimizer state incl.
-            # Adam's step counter stays put, exactly like the loop engine)
-            lora_c = tree_where(active, new_lora, lora_c)
-            opt_c = tree_where(active, new_opt, opt_c)
+                loss, lora_c, opt_c = jax.vmap(
+                    lambda lo, op, b, m, a: one_step(lo, op, None, b, m, a)
+                )(lora_c, opt_c, batch, sv, active)
             return (lora_c, opt_c), loss
 
         (cl_lora, cl_opt), losses = jax.lax.scan(
@@ -325,11 +328,10 @@ def _client_train_body(
             bidx, active = xs
             batch = {kk: v[bidx] for kk, v in cdata.items()}
             sv = sample_valid[bidx]
-            loss, new_lo, new_op = client_step(params, lo, op, mask, batch, sv, lr)
-            # padded steps compute but do not commit (same no-op semantics
-            # as the vectorized round program's tree_where)
-            lo = tree_where(active, new_lo, lo)
-            op = tree_where(active, new_op, op)
+            # padded steps compute but do not commit (the optimizer's
+            # ``active`` predicate — same no-op semantics as the vectorized
+            # round program, no separate commit pass)
+            loss, lo, op = client_step(params, lo, op, mask, batch, sv, lr, active)
             return (lo, op), loss
 
         (lora, opt), losses = jax.lax.scan(step, (lora, opt), (batch_idx, step_valid))

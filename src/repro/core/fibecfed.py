@@ -140,6 +140,7 @@ class FibecFed:
         client_data: Sequence[Dict[str, np.ndarray]],
         *,
         optimizer: str = "sgd",
+        fused_optimizer: bool = False,
         difficulty_metric: str = "fisher",
         gal_mode: str = "importance",
         sparse_update: bool = True,
@@ -181,8 +182,16 @@ class FibecFed:
         self._init_lora = jax.tree.map(jnp.copy, init_lora)
         self.global_lora = init_lora  # server copy (GAL part authoritative)
 
+        # fused_optimizer=True routes local updates through the fused Pallas
+        # masked-update kernels (repro.kernels.masked_update) — same frozen-
+        # moment semantics, one read/write pass per leaf; "force" pins the
+        # kernel path even for sub-tile leaves (kernel-coverage tests). The
+        # flag is part of every optimizer-program memo key: fused and unfused
+        # updates trace different programs.
         self.optimizer_name = optimizer
-        self.opt_init, self.opt_update = make_optimizer(optimizer)
+        self.fused_optimizer = fused_optimizer
+        self._opt_key = (optimizer, fused_optimizer)
+        self.opt_init, self.opt_update = make_optimizer(optimizer, fused=fused_optimizer)
 
         self.schedule = CurriculumSchedule(
             strategy=fl.curriculum,
@@ -294,7 +303,7 @@ class FibecFed:
 
             return jax.jit(step)
 
-        return _memo(("grad_step", loss_fn, self.optimizer_name), build)
+        return _memo(("grad_step", loss_fn, self._opt_key), build)
 
     def _sample_scores(self):
         loss_fn = self.loss_fn
@@ -374,13 +383,13 @@ class FibecFed:
         use_mask = self._stacked_mask is not None
         if mesh is not None:
             return _memo(
-                ("round", loss_fn, self.optimizer_name, use_mask, mesh),
+                ("round", loss_fn, self._opt_key, use_mask, mesh),
                 lambda: eng.build_sharded_round_fn(
                     loss_fn, opt_update, use_neuron_mask=use_mask, mesh=mesh
                 ),
             )
         return _memo(
-            ("round", loss_fn, self.optimizer_name, use_mask),
+            ("round", loss_fn, self._opt_key, use_mask),
             lambda: eng.build_round_fn(loss_fn, opt_update, use_neuron_mask=use_mask),
         )
 
@@ -393,7 +402,7 @@ class FibecFed:
         loss_fn, opt_update = self.loss_fn, self.opt_update
         use_mask = self.sparse_update and self.clients[0].neuron_mask is not None
         return _memo(
-            ("client_train", loss_fn, self.optimizer_name, use_mask),
+            ("client_train", loss_fn, self._opt_key, use_mask),
             lambda: eng.build_client_train_fn(
                 loss_fn, opt_update, use_neuron_mask=use_mask
             ),

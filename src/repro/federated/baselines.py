@@ -50,6 +50,7 @@ def make_runner(
     *,
     seed: int = 0,
     optimizer: str = "sgd",
+    fused_optimizer: bool = False,
     engine: str = "vectorized",
     mesh: Any = None,
     scenario: Any = None,
@@ -63,8 +64,8 @@ def make_runner(
         fl = dataclasses.replace(fl, curriculum=curriculum)
     return FibecFed(
         model, loss_fn, fl, client_data, seed=seed, optimizer=optimizer,
-        engine=engine, mesh=mesh, scenario=scenario, async_cfg=async_cfg,
-        **preset
+        fused_optimizer=fused_optimizer, engine=engine, mesh=mesh,
+        scenario=scenario, async_cfg=async_cfg, **preset
     )
 
 

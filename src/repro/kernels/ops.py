@@ -15,9 +15,15 @@ import numpy as np
 
 from repro.kernels import fisher_diag as _fd
 from repro.kernels import flash_attention as _fa
+from repro.kernels import masked_update as _mu
 from repro.kernels import ref as _ref
 from repro.kernels import sparse_lora as _sl
 from repro.kernels import ssd_chunk as _sc
+
+# leaves below one (BLOCK_ROWS, BLOCK_COLS) tile take the oracle fallback in
+# the masked-update wrappers (padding a 64-element LoRA leaf up to a 32k tile
+# would invert the bandwidth win); use_kernel=True/False overrides per call
+MIN_KERNEL_LEAF = _mu.BLOCK_ROWS * _mu.BLOCK_COLS
 
 
 def _interpret() -> bool:
@@ -100,3 +106,152 @@ def flash_attention(q, k, v, *, causal: bool = True, window=None):
 def ssd_chunk_intra(x, a, b, c):
     """Intra-chunk SSD. x (G,Q,hd), a (G,1,Q), b/c (G,Q,N) -> (G,Q,hd) f32."""
     return _sc.ssd_chunk_intra_kernel(x, a, b, c, interpret=_interpret())
+
+
+# ---------------------------------------------------------------------------
+# fused masked optimizer updates (drop-ins for repro.optim's update fns)
+# ---------------------------------------------------------------------------
+
+
+def _tile2d(x: jax.Array) -> jax.Array:
+    """Flatten a leaf and pad it to a (BLOCK_ROWS·k, BLOCK_COLS) tile grid."""
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    cols = _mu.BLOCK_COLS
+    rows_needed = -(-n // cols)
+    rows = max(
+        _mu.BLOCK_ROWS, -(-rows_needed // _mu.BLOCK_ROWS) * _mu.BLOCK_ROWS
+    )
+    return jnp.pad(flat, (0, rows * cols - n)).reshape(rows, cols)
+
+
+def _untile(x2: jax.Array, like: jax.Array) -> jax.Array:
+    return x2.reshape(-1)[: like.size].reshape(like.shape).astype(like.dtype)
+
+
+def _use_kernel(n: int, use_kernel) -> bool:
+    return (n >= MIN_KERNEL_LEAF) if use_kernel is None else bool(use_kernel)
+
+
+def _scal_row(lr, active, mhat_scale=0.0, vhat_scale=0.0) -> jax.Array:
+    """The kernels' (1, SCAL_WIDTH) traced-scalar row [lr, active, m̂, v̂]."""
+    act = (
+        jnp.float32(1.0)
+        if active is None
+        else (jnp.asarray(active) != 0).astype(jnp.float32)
+    )
+    return jnp.stack(
+        [
+            jnp.asarray(lr, jnp.float32),
+            act,
+            jnp.asarray(mhat_scale, jnp.float32),
+            jnp.asarray(vhat_scale, jnp.float32),
+        ]
+    ).reshape(1, _mu.SCAL_WIDTH)
+
+
+def _aligned_leaves(tree, treedef, n):
+    """Leaves of an optional companion tree, aligned with the params' leaves."""
+    return [None] * n if tree is None else treedef.flatten_up_to(tree)
+
+
+@functools.partial(jax.jit, static_argnames=("momentum", "use_kernel"))
+def masked_sgd_update(
+    grads, state, params, lr, mask=None, active=None,
+    *, momentum: float = 0.0, use_kernel=None,
+):
+    """Fused masked SGD(+momentum) over a pytree — one kernel pass per leaf.
+
+    Drop-in for :func:`repro.optim.optimizers.sgd_update` (same signature and
+    frozen-moment semantics): entries with ``mask == 0`` — and every entry
+    when ``active == 0`` (a padded curriculum step) — keep their parameter
+    AND momentum bit-for-bit. Leaves below one tile (or with
+    ``use_kernel=False``) take the equivalent single-expression oracle.
+    """
+    scal = _scal_row(lr, active)
+    leaves_p, treedef = jax.tree.flatten(params)
+    leaves_g = treedef.flatten_up_to(grads)
+    leaves_mu = _aligned_leaves(state["mu"] if momentum else None, treedef, len(leaves_p))
+    leaves_mk = _aligned_leaves(mask, treedef, len(leaves_p))
+
+    def one(p, g, mu, mk):
+        if not _use_kernel(p.size, use_kernel):
+            return _ref.masked_sgd_update_ref(
+                p, g, mu, mk, lr, momentum=momentum, active=active
+            )
+        new_p2, new_mu2 = _mu.masked_sgd_update_2d(
+            _tile2d(p),
+            _tile2d(g),
+            _tile2d(mu) if momentum else None,
+            _tile2d(mk) if mk is not None else None,
+            scal,
+            momentum=momentum,
+            interpret=_interpret(),
+        )
+        return _untile(new_p2, p), (_untile(new_mu2, mu) if momentum else None)
+
+    outs = [one(*leaf) for leaf in zip(leaves_p, leaves_g, leaves_mu, leaves_mk)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in outs])
+    if momentum:
+        return new_params, {"mu": jax.tree.unflatten(treedef, [o[1] for o in outs])}
+    return new_params, state
+
+
+@functools.partial(
+    jax.jit, static_argnames=("b1", "b2", "eps", "wd", "use_kernel")
+)
+def masked_adamw_update(
+    grads, state, params, lr, mask=None, active=None,
+    *, b1=0.9, b2=0.999, eps=1e-8, wd=0.0, use_kernel=None,
+):
+    """Fused masked AdamW over a pytree — one kernel pass per leaf.
+
+    Drop-in for :func:`repro.optim.optimizers.adamw_update`: frozen entries
+    hold parameter, ``m``, and ``v`` bit-for-bit, and the step counter ``t``
+    only advances on active steps, so a masked/padded step is a true no-op.
+    Bias-correction scales are computed from ``t`` once out here and shared
+    by every leaf's kernel call.
+    """
+    inc = (
+        jnp.int32(1)
+        if active is None
+        else (jnp.asarray(active) != 0).astype(jnp.int32)
+    )
+    t = state["t"] + inc
+    tf = t.astype(jnp.float32)
+    mhat_scale = 1.0 / (1.0 - b1**tf)
+    vhat_scale = 1.0 / (1.0 - b2**tf)
+    scal = _scal_row(lr, active, mhat_scale, vhat_scale)
+    leaves_p, treedef = jax.tree.flatten(params)
+    leaves_g = treedef.flatten_up_to(grads)
+    leaves_m = treedef.flatten_up_to(state["m"])
+    leaves_v = treedef.flatten_up_to(state["v"])
+    leaves_mk = _aligned_leaves(mask, treedef, len(leaves_p))
+
+    def one(p, g, m, v, mk):
+        if not _use_kernel(p.size, use_kernel):
+            return _ref.masked_adamw_update_ref(
+                p, g, m, v, mk, lr, mhat_scale, vhat_scale,
+                b1=b1, b2=b2, eps=eps, wd=wd, active=active,
+            )
+        new_p2, new_m2, new_v2 = _mu.masked_adamw_update_2d(
+            _tile2d(p),
+            _tile2d(g),
+            _tile2d(m),
+            _tile2d(v),
+            _tile2d(mk) if mk is not None else None,
+            scal,
+            b1=b1, b2=b2, eps=eps, wd=wd,
+            interpret=_interpret(),
+        )
+        return _untile(new_p2, p), _untile(new_m2, m), _untile(new_v2, v)
+
+    outs = [
+        one(*leaf)
+        for leaf in zip(leaves_p, leaves_g, leaves_m, leaves_v, leaves_mk)
+    ]
+    return jax.tree.unflatten(treedef, [o[0] for o in outs]), {
+        "m": jax.tree.unflatten(treedef, [o[1] for o in outs]),
+        "v": jax.tree.unflatten(treedef, [o[2] for o in outs]),
+        "t": t,
+    }

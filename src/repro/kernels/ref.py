@@ -12,6 +12,67 @@ def fisher_diag_update_ref(g: jax.Array, fim: jax.Array, momentum: float) -> jax
     return momentum * fim.astype(jnp.float32) + (1.0 - momentum) * gf * gf
 
 
+def _update_pred(mask, active):
+    """Frozen-entry predicate ``eff = mask ⊙ active`` (§4.3.2).
+
+    ``mask`` is an elementwise 0/1 keep-mask (or None = dense), ``active`` a
+    scalar 0/1 step predicate (or None = committed step). Returns a boolean
+    array/scalar, or None when every entry updates.
+    """
+    pred = None
+    if mask is not None:
+        pred = mask != 0
+    if active is not None:
+        a = jnp.asarray(active) != 0
+        pred = a if pred is None else pred & a
+    return pred
+
+
+def masked_sgd_update_ref(p, g, mu, mask, lr, *, momentum: float = 0.0, active=None):
+    """Fused masked SGD(+momentum) oracle: frozen entries (``mask == 0`` or
+    ``active == 0``) keep both their parameter AND their momentum bit-for-bit.
+    ``mu`` is None without momentum. Returns ``(new_p, new_mu)``."""
+    pf = p.astype(jnp.float32)
+    gf = g.astype(jnp.float32)
+    pred = _update_pred(mask, active)
+    sel = (lambda new, old: new) if pred is None else (
+        lambda new, old: jnp.where(pred, new, old)
+    )
+    if momentum:
+        muf = mu.astype(jnp.float32)
+        mu_new = sel(momentum * muf + gf, muf)
+        return sel(pf - lr * mu_new, pf).astype(p.dtype), mu_new.astype(mu.dtype)
+    return sel(pf - lr * gf, pf).astype(p.dtype), None
+
+
+def masked_adamw_update_ref(
+    p, g, m, v, mask, lr, mhat_scale, vhat_scale,
+    *, b1=0.9, b2=0.999, eps=1e-8, wd=0.0, active=None,
+):
+    """Fused masked AdamW oracle with held moments under the mask. The bias-
+    correction scales are precomputed from the (externally-held) step counter
+    so kernel and oracle share one definition. Returns (new_p, new_m, new_v).
+    """
+    pf = p.astype(jnp.float32)
+    gf = g.astype(jnp.float32)
+    mf = m.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    pred = _update_pred(mask, active)
+    sel = (lambda new, old: new) if pred is None else (
+        lambda new, old: jnp.where(pred, new, old)
+    )
+    m_new = sel(b1 * mf + (1.0 - b1) * gf, mf)
+    v_new = sel(b2 * vf + (1.0 - b2) * gf * gf, vf)
+    step = lr * (m_new * mhat_scale) / (jnp.sqrt(v_new * vhat_scale) + eps)
+    if wd:
+        step = step + lr * wd * pf
+    return (
+        sel(pf - step, pf).astype(p.dtype),
+        m_new.astype(m.dtype),
+        v_new.astype(v.dtype),
+    )
+
+
 def sparse_lora_matmul_ref(
     x: jax.Array, a: jax.Array, b: jax.Array, mask: jax.Array, scale: float = 1.0
 ) -> jax.Array:

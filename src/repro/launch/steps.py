@@ -24,7 +24,6 @@ import jax.numpy as jnp
 
 from repro.config import ModelConfig
 from repro.models.model_api import ModelFns
-from repro.optim import adamw_update
 from repro.train.losses import make_loss_fn
 
 
@@ -54,11 +53,18 @@ def _merge_lora(gal, local_c, mask):
 
 
 def _adamw(params, grads, m, v, t, mask, lr):
+    # frozen-neuron semantics, matching repro.optim.adamw_update: masked
+    # entries hold their moments (a zeroed gradient alone would let m/v decay)
     b1, b2, eps = 0.9, 0.999, 1e-8
     mask = jax.tree.map(lambda mm: mm.astype(jnp.float32), mask)
-    grads = jax.tree.map(lambda g, mm: g * mm, grads, mask)
-    m = jax.tree.map(lambda a, g: b1 * a + (1 - b1) * g, m, grads)
-    v = jax.tree.map(lambda a, g: b2 * a + (1 - b2) * g * g, v, grads)
+    m = jax.tree.map(
+        lambda a, g, mm: jnp.where(mm != 0, b1 * a + (1 - b1) * g, a),
+        m, grads, mask,
+    )
+    v = jax.tree.map(
+        lambda a, g, mm: jnp.where(mm != 0, b2 * a + (1 - b2) * g * g, a),
+        v, grads, mask,
+    )
     tf = t.astype(jnp.float32) + 1.0
     c1 = 1.0 / (1.0 - b1**tf)
     c2 = 1.0 / (1.0 - b2**tf)

@@ -4,6 +4,5 @@ from repro.optim.optimizers import (
     adamw_init,
     adamw_update,
     make_optimizer,
-    tree_where,
 )
 from repro.optim.schedule import linear_warmup_cosine

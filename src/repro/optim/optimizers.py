@@ -1,39 +1,47 @@
 """Pure-JAX optimizers (no optax). Operate on arbitrary pytrees.
 
 ``make_optimizer`` returns ``(init_fn, update_fn)`` where
-``update_fn(grads, state, params, lr, mask=None)`` applies an optional
-FibecFed update mask (0/1 pytree): masked-out entries receive no update and
-their moments stay untouched — the paper's frozen-neuron semantics
-(§4.3.2), not just a zeroed gradient.
+``update_fn(grads, state, params, lr, mask=None, active=None)`` applies an
+optional FibecFed update mask (0/1 pytree) and an optional per-step
+``active`` predicate (0/1 scalar, the round engines' padded-step no-op
+switch): frozen entries — ``mask == 0``, or every entry when
+``active == 0`` — receive no update and their moments are held bit-for-bit
+(the paper's frozen-neuron semantics, §4.3.2, not just a zeroed gradient).
+
+Holding the moments matters in two ways. A zeroed gradient alone would let
+SGD momentum and Adam's ``m``/``v`` *decay* under the mask (``μ ← γμ``),
+contradicting frozen-neuron semantics; worse, a stale nonzero momentum —
+possible whenever ``init_phase`` rebuilds the neuron masks after training —
+would keep moving a supposedly frozen parameter for ``log(ε)/log(γ)`` more
+steps. The update therefore commits per entry: ``new = eff ? updated : old``
+with ``eff = mask ⊙ active``. AdamW's step counter ``t`` likewise only
+advances on active steps.
+
+``make_optimizer(..., fused=True)`` swaps in the fused Pallas masked-update
+kernels (:mod:`repro.kernels.ops`), which implement exactly these semantics
+in one read/write pass per leaf; the tree.map implementations below are the
+semantic spec the kernels' oracles mirror.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Optional, Tuple
+import functools
+from typing import Callable, Tuple
 
 import jax
 import jax.numpy as jnp
 
 
-def _masked(g, mask_leaf):
-    return g if mask_leaf is None else g * mask_leaf.astype(g.dtype)
-
-
-def tree_where(pred, new, old):
-    """Per-leaf ``where`` keyed on a leading-axis predicate.
-
-    ``pred`` is (k,) (or scalar) and selects, for each entry along the leaves'
-    leading axis, the updated vs. previous value. This is how the vectorized
-    FL engine no-ops padded curriculum steps inside ``lax.scan`` without
-    changing optimizer state — the scan body always computes, ``tree_where``
-    decides what sticks (including moment buffers and Adam's step counter).
-    """
-    pred = jnp.asarray(pred)
-
-    def sel(n, o):
-        p = pred.reshape(pred.shape + (1,) * (n.ndim - pred.ndim)) if n.ndim else pred
-        return jnp.where(p != 0, n, o)
-
-    return jax.tree.map(sel, new, old)
+def _commit(new, old, mask_leaf, active):
+    """``eff = mask ⊙ active`` entry-wise commit; ``None`` means all-on."""
+    if mask_leaf is None and active is None:
+        return new
+    if mask_leaf is None:
+        pred = jnp.asarray(active) != 0
+    elif active is None:
+        pred = mask_leaf != 0
+    else:
+        pred = (mask_leaf != 0) & (jnp.asarray(active) != 0)
+    return jnp.where(pred, new, old)
 
 
 # ---------------------------------------------------------------------------
@@ -47,15 +55,28 @@ def sgd_init(params, momentum: float = 0.0):
     return {}
 
 
-def sgd_update(grads, state, params, lr, mask=None, *, momentum: float = 0.0):
+def sgd_update(grads, state, params, lr, mask=None, active=None, *,
+               momentum: float = 0.0):
     """`momentum` is a static hyperparameter (close over it, don't trace it)."""
-    if mask is not None:
-        grads = jax.tree.map(lambda g, m: g * m.astype(g.dtype), grads, mask)
+
+    def mom(m, g, mk=None):
+        return _commit(momentum * m + g, m, mk, active)
+
+    def upd(p, d, mk=None):
+        return _commit(p - lr * d, p, mk, active)
+
     if momentum:
-        mu = jax.tree.map(lambda m, g: momentum * m + g, state["mu"], grads)
-        new_params = jax.tree.map(lambda p, m: p - lr * m, params, mu)
+        if mask is not None:
+            mu = jax.tree.map(mom, state["mu"], grads, mask)
+            new_params = jax.tree.map(upd, params, mu, mask)
+        else:
+            mu = jax.tree.map(mom, state["mu"], grads)
+            new_params = jax.tree.map(upd, params, mu)
         return new_params, {"mu": mu}
-    new_params = jax.tree.map(lambda p, g: p - lr * g, params, grads)
+    if mask is not None:
+        new_params = jax.tree.map(upd, params, grads, mask)
+    else:
+        new_params = jax.tree.map(upd, params, grads)
     return new_params, state
 
 
@@ -73,13 +94,27 @@ def adamw_init(params, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.0):
     }
 
 
-def adamw_update(grads, state, params, lr, mask=None, *, b1=0.9, b2=0.999,
-                 eps=1e-8, wd=0.0):
-    t = state["t"] + 1
+def adamw_update(grads, state, params, lr, mask=None, active=None, *,
+                 b1=0.9, b2=0.999, eps=1e-8, wd=0.0):
+    inc = (
+        jnp.int32(1)
+        if active is None
+        else (jnp.asarray(active) != 0).astype(jnp.int32)
+    )
+    t = state["t"] + inc
+
+    def mom(mm, g, mk=None):
+        return _commit(b1 * mm + (1 - b1) * g, mm, mk, active)
+
+    def vel(vv, g, mk=None):
+        return _commit(b2 * vv + (1 - b2) * jnp.square(g), vv, mk, active)
+
     if mask is not None:
-        grads = jax.tree.map(lambda g, mk: g * mk.astype(g.dtype), grads, mask)
-    m = jax.tree.map(lambda mm, g: b1 * mm + (1 - b1) * g, state["m"], grads)
-    v = jax.tree.map(lambda vv, g: b2 * vv + (1 - b2) * jnp.square(g), state["v"], grads)
+        m = jax.tree.map(mom, state["m"], grads, mask)
+        v = jax.tree.map(vel, state["v"], grads, mask)
+    else:
+        m = jax.tree.map(mom, state["m"], grads)
+        v = jax.tree.map(vel, state["v"], grads)
     mhat_scale = 1.0 / (1 - b1**t.astype(jnp.float32))
     vhat_scale = 1.0 / (1 - b2**t.astype(jnp.float32))
 
@@ -87,9 +122,7 @@ def adamw_update(grads, state, params, lr, mask=None, *, b1=0.9, b2=0.999,
         step = lr * (mm * mhat_scale) / (jnp.sqrt(vv * vhat_scale) + eps)
         if wd:
             step = step + lr * wd * p
-        if mk is not None:
-            step = step * mk.astype(step.dtype)
-        return p - step
+        return _commit(p - step, p, mk, active)
 
     if mask is not None:
         new_params = jax.tree.map(upd, params, m, v, mask)
@@ -98,24 +131,39 @@ def adamw_update(grads, state, params, lr, mask=None, *, b1=0.9, b2=0.999,
     return new_params, {"m": m, "v": v, "t": t}
 
 
-def make_optimizer(name: str, **kw) -> Tuple[Callable, Callable]:
+def make_optimizer(name: str, fused: bool = False, **kw) -> Tuple[Callable, Callable]:
+    """``fused=True`` routes updates through the fused Pallas masked-update
+    kernels (one read/write pass per leaf, oracle fallback below one tile);
+    ``fused="force"`` additionally forces the kernel path on every leaf
+    regardless of size (kernel-coverage tests / TPU debugging). Both share
+    the frozen-moment semantics of the tree.map implementations above.
+    """
+    if fused:
+        # lazy: the kernel layer is only a dependency of the fused path
+        from repro.kernels import ops as _kops
+
+        use_kernel = True if fused == "force" else None
     if name == "sgd":
-        import functools
-
         momentum = kw.get("momentum", 0.0)
-        return (
-            lambda p: sgd_init(p, momentum),
-            functools.partial(sgd_update, momentum=momentum),
-        )
+        if fused:
+            upd = functools.partial(
+                _kops.masked_sgd_update, momentum=momentum, use_kernel=use_kernel
+            )
+        else:
+            upd = functools.partial(sgd_update, momentum=momentum)
+        return (lambda p: sgd_init(p, momentum), upd)
     if name == "adamw":
-        import functools
-
-        upd = functools.partial(
-            adamw_update,
+        hyper = dict(
             b1=kw.get("b1", 0.9),
             b2=kw.get("b2", 0.999),
             eps=kw.get("eps", 1e-8),
             wd=kw.get("weight_decay", 0.0),
         )
+        if fused:
+            upd = functools.partial(
+                _kops.masked_adamw_update, use_kernel=use_kernel, **hyper
+            )
+        else:
+            upd = functools.partial(adamw_update, **hyper)
         return adamw_init, upd
     raise ValueError(name)

@@ -133,6 +133,45 @@ def test_async_speedup_regression_fails(files):
     assert bench_compare.main([cur, "--baseline", base, "--warn-only"]) == 0
 
 
+def test_device_independent_block_gates_across_device_mismatch(files, capsys):
+    """masked_update-style payloads: buffer-reduction ratios are structural
+    (no device count can change them), so a 1-device laptop run must still
+    gate them against the 8-device CI baseline instead of silently skipping."""
+    def payload(reduction, devices):
+        return {
+            "bench": "masked_update",
+            "num_xla_devices": devices,
+            "speedups": {"fused_over_unfused/adamw": 1.1},
+            "speedups_device_independent": {"buffer_reduction/adamw": reduction},
+        }
+
+    base = files("base.json", payload(1.4, devices=8))
+    ok = files("ok.json", payload(1.35, devices=1))
+    assert bench_compare.main([ok, "--baseline", base]) == 0
+    out = capsys.readouterr().out
+    assert "skipped" in out  # the device-dependent metrics still skip...
+    assert "buffer_reduction/adamw" in out  # ...but the structural one gates
+    bad = files("bad.json", payload(0.9, devices=1))  # fusion benefit lost
+    assert bench_compare.main([bad, "--baseline", base]) == 1
+    # same device count: both blocks compare in one pass
+    same = files("same.json", payload(1.4, devices=8))
+    assert bench_compare.main([same, "--baseline", base]) == 0
+
+
+def test_committed_masked_update_baseline_is_loadable():
+    path = pathlib.Path(__file__).resolve().parent.parent / "benchmarks" / "baselines" / "masked_update.json"
+    payload = json.loads(path.read_text())
+    assert payload["bench"] == "masked_update"
+    assert payload["num_xla_devices"] == 8  # the tier1-multidevice regime
+    for name in ("sgd", "adamw"):
+        # the structural acceptance claim: the fused formulation binds
+        # strictly fewer intermediate buffers than the tree.map chain
+        assert payload["speedups_device_independent"][f"buffer_reduction/{name}"] > 1.0
+        assert payload["speedups"][f"fused_over_unfused/{name}"] > 0
+        opt = payload["optimizers"][name]
+        assert opt["lowered_ops_fused"] < opt["lowered_ops_unfused"]
+
+
 def test_committed_async_baseline_is_loadable():
     path = pathlib.Path(__file__).resolve().parent.parent / "benchmarks" / "baselines" / "async.json"
     payload = json.loads(path.read_text())

@@ -49,24 +49,25 @@ def world():
     return model, make_loss_fn(model), client_data
 
 
-def _run(world, baseline, optimizer, engine):
+def _run(world, baseline, optimizer, engine, fused=False):
     model, loss_fn, client_data = world
     runner = make_runner(
         baseline, model, loss_fn, FL, client_data,
-        optimizer=optimizer, engine=engine, seed=7,
+        optimizer=optimizer, fused_optimizer=fused, engine=engine, seed=7,
     )
     runner.init_phase()
     history = [runner.run_round(t) for t in range(ROUNDS)]
     return runner, history
 
 
+@pytest.mark.parametrize("fused", [False, True])
 @pytest.mark.parametrize(
     "baseline,optimizer",
     [("fibecfed", "adamw"), ("fedavg_lora", "sgd")],
 )
-def test_engines_equivalent(world, baseline, optimizer):
-    r_loop, h_loop = _run(world, baseline, optimizer, "loop")
-    r_vec, h_vec = _run(world, baseline, optimizer, "vectorized")
+def test_engines_equivalent(world, baseline, optimizer, fused):
+    r_loop, h_loop = _run(world, baseline, optimizer, "loop", fused)
+    r_vec, h_vec = _run(world, baseline, optimizer, "vectorized", fused)
 
     # same curriculum decisions
     for cl, cv in zip(r_loop.clients, r_vec.clients):
@@ -91,6 +92,22 @@ def test_engines_equivalent(world, baseline, optimizer):
             np.testing.assert_allclose(
                 np.asarray(a), np.asarray(b), atol=5e-5, rtol=1e-4
             )
+
+
+def test_forced_kernel_round_matches_unfused(world):
+    """fused_optimizer="force" pins the Pallas masked-update kernel path on
+    every leaf (this world's tiny LoRA leaves would otherwise all take the
+    sub-tile oracle fallback), so a full init+tuning run exercises the
+    batched kernel inside the round program's vmap-over-clients + scan — and
+    must still reproduce the unfused vectorized engine."""
+    r_unf, h_unf = _run(world, "fibecfed", "adamw", "vectorized", False)
+    r_krn, h_krn = _run(world, "fibecfed", "adamw", "vectorized", "force")
+    for hu, hk in zip(h_unf, h_krn):
+        assert hu["loss"] == pytest.approx(hk["loss"], rel=1e-4, abs=1e-5)
+    for a, b in zip(
+        jax.tree.leaves(r_unf.global_lora), jax.tree.leaves(r_krn.global_lora)
+    ):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=5e-5, rtol=1e-4)
 
 
 def test_reinit_after_donated_round(world):
@@ -129,16 +146,17 @@ def test_unknown_engine_rejected(world):
 
 
 @pytest.mark.parametrize(
-    "baseline,optimizer",
-    [("fibecfed", "adamw"), ("fedavg_lora", "sgd")],
+    "baseline,optimizer,fused",
+    [("fibecfed", "adamw", False), ("fedavg_lora", "sgd", False),
+     ("fibecfed", "adamw", True)],
 )
-def test_async_equivalent_to_loop(world, baseline, optimizer):
+def test_async_equivalent_to_loop(world, baseline, optimizer, fused):
     """The degenerate async configuration IS synchronous FedAvg: homogeneous
     scenario (staleness 0, no dropout) with buffer size = cohort size must
     reproduce the loop engine — allclose LoRA trees and losses, identical
     comm accounting attributed per completion event."""
-    r_loop, h_loop = _run(world, baseline, optimizer, "loop")
-    r_async, h_async = _run(world, baseline, optimizer, "async")
+    r_loop, h_loop = _run(world, baseline, optimizer, "loop", fused)
+    r_async, h_async = _run(world, baseline, optimizer, "async", fused)
 
     for cl, ca in zip(r_loop.clients, r_async.clients):
         np.testing.assert_array_equal(cl.order, ca.order)
@@ -277,7 +295,8 @@ def test_sharded_equivalent_to_loop(world5, n_devices):
     assert lead.sharding.mesh.shape.get("data") == n_devices
 
 
-def test_sharded_matches_vectorized_bitwise_on_one_device(world5):
+@pytest.mark.parametrize("fused", [False, True])
+def test_sharded_matches_vectorized_bitwise_on_one_device(world5, fused):
     """On a 1-device mesh the sharded program is the vectorized program (the
     sharding constraints are no-ops), so the histories agree to float32
     determinism — a cheap guard that the shared round body didn't fork."""
@@ -286,7 +305,7 @@ def test_sharded_matches_vectorized_bitwise_on_one_device(world5):
     for engine, kw in (("vectorized", {}), ("sharded", {"mesh": make_client_mesh(1)})):
         r = make_runner(
             "fibecfed", model, loss_fn, FL5, client_data,
-            optimizer="sgd", engine=engine, seed=2, **kw,
+            optimizer="sgd", fused_optimizer=fused, engine=engine, seed=2, **kw,
         )
         r.init_phase()
         hist[engine] = [r.run_round(t)["loss"] for t in range(ROUNDS)]
