@@ -1,8 +1,8 @@
-"""Virtual wall-clock to target loss: synchronous vs async aggregation.
+"""Virtual wall-clock to target loss: sync vs async vs adaptive async.
 
 The synchronous engines barrier every round on the slowest chosen client, so
 under device heterogeneity their wall-clock is straggler-bound. This
-benchmark replays both aggregation modes on the *virtual clock* of a
+benchmark replays three aggregation modes on the *virtual clock* of a
 ``repro.federated.hetero`` scenario preset and measures how long each takes
 to reach the same training-loss target:
 
@@ -13,18 +13,24 @@ to reach the same training-loss target:
 * **async** — ``FibecFed(engine="async", scenario=...)`` with a half-cohort
   buffer: the event-driven scheduler merges any K completions, stragglers
   land late and staleness-discounted, and the virtual clock advances per
-  completion event instead of per barrier.
+  completion event instead of per barrier (the PR 3 baseline policy);
+* **adaptive** — the same async engine with the adaptive policy suite on:
+  step-count adaptation (slow devices train the easiest ``ceil(n/r)`` of
+  their selected batches), wall-clock-aware cohort sampling (fast clients
+  early in the curriculum ramp), a staleness cutoff, and completion-rate
+  buffer adaptation (``AsyncAggConfig`` knobs).
 
 The target loss is defined by the sync trajectory itself (the smoothed loss
 it reaches at 75% of its round budget), so "async wins" means: the async
 engine reaches the *same* loss level in less virtual time, not that it
-optimizes a different objective. Both runners share the same
+optimizes a different objective. All runners share the same
 ``rounds``/curriculum schedule; only the aggregation mode (and therefore
 the clock model) differs. Under ``straggler`` (4x speed skew on a quarter
 of the fleet) the async engine's merge cadence follows the fast clients and
-the virtual-time ratio is the headline.
+the virtual-time ratio is the headline; ``adaptive_over_async`` isolates
+what the adaptive policies add on top.
 
-Both runs share one model/seed/data world; per-client speed assignments are
+All runs share one model/seed/data world; per-client speed assignments are
 identical (``hetero.SCENARIO_SEED_OFFSET``), so the comparison is paired.
 
 Usage:  PYTHONPATH=src python benchmarks/async_bench.py
@@ -136,7 +142,25 @@ def run_sync(preset, *, max_rounds: int, seed: int) -> dict:
     return {"engine": engine, "times": times, "best": _smoothed_best(losses)}
 
 
-def run_async(preset, *, target: float, max_rounds: int, max_merges: int, seed: int) -> dict:
+def adaptive_cfg(k: int) -> AsyncAggConfig:
+    """The benchmark's adaptive policy bundle (the PR 3 baseline is the same
+    buffer with every policy at its default): step-count adaptation paces
+    stragglers to the fast cohort's cadence, sampling bias keeps early
+    merges straggler-free, the cutoff discards hopeless updates, and buffer
+    adaptation absorbs dropout (mobile preset)."""
+    return AsyncAggConfig(
+        buffer_size=max(1, k // 2),
+        adapt_steps=True,
+        sampling_bias=2.0,
+        staleness_cutoff=4,
+        adapt_buffer=True,
+    )
+
+
+def run_async(
+    preset, *, target: float, max_rounds: int, max_merges: int, seed: int,
+    async_cfg: AsyncAggConfig,
+) -> dict:
     """Async merges until the smoothed loss reaches ``target`` (or cap).
 
     The runner gets the SAME ``rounds=max_rounds`` config as the sync run —
@@ -146,11 +170,10 @@ def run_async(preset, *, target: float, max_rounds: int, max_merges: int, seed: 
     """
     model, client_data = build_world(seed=seed)
     fl = fl_config(max_rounds)
-    k = fl.devices_per_round
     runner = make_runner(
         "fibecfed", model, make_loss_fn(model), fl, client_data,
         seed=seed, optimizer="sgd", engine="async", scenario=preset,
-        async_cfg=AsyncAggConfig(buffer_size=max(1, k // 2)),
+        async_cfg=async_cfg,
     )
     runner.init_phase()
     times, losses = [], []
@@ -173,11 +196,18 @@ def bench_scenario(name: str, *, max_rounds: int, seed: int = 0) -> dict:
     sync_time = next(
         tm for tm, b in zip(sync["times"], sync["best"]) if b <= target
     )
+    k = fl_config(max_rounds).devices_per_round
     asy = run_async(
         preset, target=target, max_rounds=max_rounds,
         max_merges=6 * max_rounds, seed=seed,
+        async_cfg=AsyncAggConfig(buffer_size=max(1, k // 2)),
+    )
+    ada = run_async(
+        preset, target=target, max_rounds=max_rounds,
+        max_merges=6 * max_rounds, seed=seed, async_cfg=adaptive_cfg(k),
     )
     speedup = sync_time / asy["time"] if asy["reached"] else 0.0
+    ada_speedup = sync_time / ada["time"] if ada["reached"] else 0.0
     return {
         "scenario": name,
         "sync_engine": sync["engine"],
@@ -187,20 +217,36 @@ def bench_scenario(name: str, *, max_rounds: int, seed: int = 0) -> dict:
         "async_reached_target": asy["reached"],
         "async_merges": asy["merges"],
         "virtual_speedup": speedup,
+        "adaptive_virtual_time": ada["time"],
+        "adaptive_reached_target": ada["reached"],
+        "adaptive_merges": ada["merges"],
+        "adaptive_speedup": ada_speedup,
+        # only meaningful when BOTH runs reached the target — a capped
+        # baseline time would fabricate a finite but incomparable ratio
+        "adaptive_over_async": (
+            asy["time"] / ada["time"]
+            if (ada["reached"] and asy["reached"])
+            else 0.0
+        ),
     }
 
 
 def bench_all(scenarios, *, max_rounds: int) -> tuple:
     """Returns (csv_rows, speedups dict, per-scenario results dict)."""
     results = {s: bench_scenario(s, max_rounds=max_rounds) for s in scenarios}
-    speedups = {
-        f"async_over_sync/{s}": r["virtual_speedup"] for s, r in results.items()
-    }
+    speedups = {}
+    for s, r in results.items():
+        speedups[f"async_over_sync/{s}"] = r["virtual_speedup"]
+        speedups[f"adaptive_over_sync/{s}"] = r["adaptive_speedup"]
+        speedups[f"adaptive_over_async/{s}"] = r["adaptive_over_async"]
     rows = [
         f"async/{r['scenario']},0.0,"
         f"virtual_speedup={r['virtual_speedup']:.2f}x;"
+        f"adaptive_speedup={r['adaptive_speedup']:.2f}x;"
+        f"adaptive_over_async={r['adaptive_over_async']:.2f}x;"
         f"sync_vt={r['sync_virtual_time']:.1f};"
         f"async_vt={r['async_virtual_time']:.1f};"
+        f"adaptive_vt={r['adaptive_virtual_time']:.1f};"
         f"target={r['target_loss']:.4f};merges={r['async_merges']}"
         for r in results.values()
     ]

@@ -23,7 +23,16 @@ class CurriculumSchedule:
     alpha: float = 0.8  # fraction of rounds until all data is used
     total_rounds: int = 100
 
-    def fraction(self, t: int) -> float:
+    def progress(self, t: int) -> float:
+        """Ramp progress in [0, 1]: how far round ``t`` is through the
+        curriculum's growth from the β-fraction to full data.
+
+        0 at t=0, 1 once the ramp completes (t >= αT, or always for the
+        ``none``/``random`` strategies, which start at full data). This is
+        the signal the async engine's wall-clock-aware cohort sampling
+        interpolates on (``AsyncAggConfig(sampling_bias=...)``): prefer
+        fast clients while the ramp is young, go uniform once it is done.
+        """
         if self.strategy in ("none", "random"):
             return 1.0
         denom = max(self.alpha * self.total_rounds, 1e-9)
@@ -37,7 +46,14 @@ class CurriculumSchedule:
             prog = math.expm1(t) / max(math.expm1(denom), 1e-9)
         else:
             raise ValueError(self.strategy)
-        return float(min(1.0, self.beta + (1.0 - self.beta) * min(prog, 1.0)))
+        return float(min(1.0, prog))
+
+    def fraction(self, t: int) -> float:
+        if self.strategy in ("none", "random"):
+            return 1.0
+        return float(
+            min(1.0, self.beta + (1.0 - self.beta) * self.progress(t))
+        )
 
 
 def num_selected_batches(schedule: CurriculumSchedule, t: int, n_batches: int) -> int:
@@ -69,6 +85,7 @@ def step_plan(
     local_epochs: int = 1,
     *,
     bucket: bool = True,
+    max_selected=None,
 ):
     """Padded per-client step schedule for the vectorized/async engines.
 
@@ -85,10 +102,23 @@ def step_plan(
     jitted round program at most ``log2(S_max) + 1`` times instead of once
     per distinct count — the padding steps are masked no-ops, so engine
     equivalence is unaffected.
+
+    ``max_selected`` (optional, one entry per client, ``None`` entries =
+    uncapped) caps each client's per-epoch selected count — the async
+    engine's step-count adaptation: a capped client trains only the easiest
+    ``max_selected[i]`` of its selected batches (curriculum order is a
+    difficulty sort, so truncation keeps the prefix). Caps clamp to >= 1 and
+    land in the same power-of-two buckets, so adaptation introduces no new
+    retraces of the compiled per-client program.
     """
     from repro.data.pipeline import bucket_size
 
     sels = [selected_batch_ids(schedule, t, o) for o in orders]
+    if max_selected is not None:
+        sels = [
+            s if cap is None else s[: max(1, int(cap))]
+            for s, cap in zip(sels, max_selected)
+        ]
     max_sel = max(len(s) for s in sels)
     padded = bucket_size(max_sel) if bucket else max_sel
     k, S = len(sels), local_epochs * padded

@@ -137,6 +137,48 @@ def build_merge_fn() -> Callable:
     return jax.jit(gal_weighted_merge)
 
 
+def lora_delta(new_lora, pulled_lora):
+    """Client-side delta extraction for the FedAsync-style merge mode: the
+    trained LoRA minus the global version the client pulled. Computed at
+    completion time — while the pulled version is still alive in the double
+    buffer — so the server never has to keep arbitrarily old versions
+    around for stragglers. Only the GAL part is meaningful downstream (the
+    merge masks the rest away)."""
+    return jax.tree.map(lambda n, p: n - p, new_lora, pulled_lora)
+
+
+def build_delta_fn() -> Callable:
+    """Jitted :func:`lora_delta`. Neither argument is donated: the new LoRA
+    is the client's live state and the pulled global may be shared by other
+    in-flight clients."""
+    return jax.jit(lora_delta)
+
+
+def gal_delta_merge(global_lora, gal_mask, stacked_deltas, weights):
+    """FedAsync-style delta application over the GAL part (merge_mode
+    ``"delta"``): ``global += sum_i w_i * delta_i`` on GAL layers, identity
+    elsewhere. ``weights`` are the *absolute* per-delta rates
+    (``federated.async_agg.delta_weights``: server lr x sample weight x
+    staleness discount, NOT renormalized) — a stale buffer moves the global
+    less, which is the property the buffered value merge cannot express.
+    At server lr 1 and staleness 0 the weights sum to 1 and this equals
+    :func:`gal_weighted_merge` exactly.
+    """
+    agg = jax.tree.map(
+        lambda x: jnp.tensordot(weights, x, axes=1), stacked_deltas
+    )
+    return jax.tree.map(
+        lambda g, m, d: g + m * d, global_lora, gal_mask, agg
+    )
+
+
+def build_delta_merge_fn() -> Callable:
+    """Jitted :func:`gal_delta_merge` — the delta-mode buffer flush. Like
+    :func:`build_merge_fn`, the old global is not donated (the double
+    buffer owns version lifetime)."""
+    return jax.jit(gal_delta_merge)
+
+
 def _round_body(
     loss_fn: Callable,
     opt_update: Callable,

@@ -36,9 +36,14 @@ Three interchangeable round engines (``engine=``):
   arrival), each client trains its own jitted scan program
   (``engine.build_client_train_fn``, no vmap barrier), and the server
   merges any ``buffer_size`` completions into a double-buffered global with
-  staleness-discounted FedAvg weights. With the homogeneous scenario and
-  buffer = cohort size it reduces exactly to the synchronous engines; comm
-  bytes are attributed per completion event.
+  staleness-discounted FedAvg weights. ``async_cfg=AsyncAggConfig(...)``
+  layers the adaptive policies on top: FedAsync-style delta merges with a
+  server learning rate (``merge_mode="delta"``), a staleness cutoff,
+  completion-rate-adaptive buffer size, per-client step-count adaptation,
+  and wall-clock-aware cohort sampling. With the homogeneous scenario,
+  buffer = cohort size, and the policies at their defaults it reduces
+  exactly to the synchronous engines; comm bytes are attributed per
+  completion event.
 
 Baseline/ablation switches (used by benchmarks, mirroring the paper's
 comparisons): ``difficulty_metric`` (fisher | loss | length | random),
@@ -91,9 +96,10 @@ def clear_compile_caches() -> None:
     for the process lifetime; a long-lived sweep over many models can call
     this between models to bound resident memory. This covers every engine's
     programs — including the async engine's per-client train programs
-    (``"client_train"`` keys) and the standalone buffered-merge program
-    (``"gal_merge"``), whose donated client buffers must never outlive a
-    cache clear (see ``tests/test_async_agg.py``'s re-init regression test).
+    (``"client_train"`` keys), the standalone merge programs (``"gal_merge"``
+    and the delta-mode ``"gal_delta_merge"``/``"lora_delta"``), whose donated
+    client buffers must never outlive a cache clear (see
+    ``tests/test_async_agg.py``'s re-init regression test).
     """
     from repro.train import losses as _losses
 
@@ -150,6 +156,44 @@ class FibecFed:
         async_cfg: Optional[Any] = None,
         seed: int = 0,
     ):
+        """Build an FL runner over host-simulated clients.
+
+        Args:
+          model: the ``ModelFns`` bundle from ``repro.models.build_model``
+            (init/forward/probe closures over one architecture config).
+          loss_fn: ``loss_fn(params, lora, batch) -> scalar`` from
+            ``repro.train.make_loss_fn(model)``; its ``.masked`` variant (if
+            present) powers the padded-batch fast paths.
+          fl: the ``FibecFedConfig`` hyperparameters (cohort size, rounds,
+            curriculum ``beta``/``alpha``, GAL fraction, sparse ratio, ...).
+          client_data: one dict of equal-length arrays per client (the
+            non-IID shards; ``repro.data.dirichlet_partition`` makes them).
+          optimizer: local optimizer name, ``"sgd"`` or ``"adamw"``.
+          fused_optimizer: ``True`` routes local updates through the fused
+            Pallas masked-update kernels (one read/write pass per leaf);
+            ``"force"`` pins the kernel path even for sub-tile leaves.
+          difficulty_metric: curriculum difficulty — ``"fisher"`` (paper),
+            ``"loss"``, ``"length"``, or ``"random"`` (ablations).
+          gal_mode: GAL layer selection — ``"importance"`` (paper),
+            ``"full"``, ``"random"``, ``"ascending"``, ``"descending"``.
+          sparse_update: apply the momentum-FIM neuron keep-masks to local
+            updates (paper §4.3.2); ``False`` trains dense LoRA.
+          engine: round execution strategy — one of ``ENGINES``
+            (``"vectorized"`` default; see the class docstring).
+          mesh: device mesh for ``engine="sharded"`` (default: a data-only
+            mesh over every XLA device); rejected for other engines.
+          scenario: device-heterogeneity preset (name or
+            ``repro.federated.hetero.ScenarioPreset``) for
+            ``engine="async"``; rejected for sync engines.
+          async_cfg: ``repro.federated.async_agg.AsyncAggConfig`` — buffer
+            size/concurrency/staleness discount plus the adaptive knobs
+            (``merge_mode``/``server_lr``, ``staleness_cutoff``,
+            ``adapt_buffer``, ``adapt_steps``, ``sampling_bias``); only
+            meaningful with ``engine="async"``.
+          seed: seeds client sampling, GAL randomness, and params/LoRA init;
+            the async scenario stream derives from it at a fixed offset so
+            heterogeneity never perturbs cohort-sampling equivalence.
+        """
         if engine not in ENGINES:
             raise ValueError(f"engine must be one of {ENGINES}, got {engine!r}")
         if engine == "sharded":
@@ -411,6 +455,14 @@ class FibecFed:
     def _merge_fn(self):
         """Standalone fused GAL merge (async buffer flush)."""
         return _memo(("gal_merge",), eng.build_merge_fn)
+
+    def _delta_merge_fn(self):
+        """FedAsync-style delta application (async ``merge_mode="delta"``)."""
+        return _memo(("gal_delta_merge",), eng.build_delta_merge_fn)
+
+    def _delta_fn(self):
+        """Client delta extraction (trained LoRA minus pulled global)."""
+        return _memo(("lora_delta",), eng.build_delta_fn)
 
     # ------------------------------------------------------------------
     # initialization phase (Alg. 1 lines 1-10)
@@ -783,30 +835,55 @@ class FibecFed:
                 scenario=bound,
                 rng=self.rng,
                 cfg=self.async_cfg,
+                # wall-clock-aware sampling interpolates on the curriculum
+                # ramp: prefer fast clients early, uniform once data is full
+                progress=self.schedule.progress,
             )
         return self._scheduler
 
-    def _async_callbacks(self, lr):
-        """(plan, train) closures handed to the event scheduler."""
-        from repro.federated.async_agg import ClientUpdate
+    def _async_callbacks(self, lr, sched):
+        """(plan, train) closures handed to the event scheduler.
 
-        fl = self.fl
+        Both apply the same step-count adaptation (``adapt_steps``): a
+        client ``r`` times slower than the fastest trains the easiest
+        ``ceil(n/r)`` of its selected curriculum batches, so ``plan`` (drop
+        timing) and ``train`` (the real local round) price identically. In
+        delta merge mode ``train`` also extracts the client's delta against
+        the pulled version while that version is still alive.
+        """
+        from repro.federated.async_agg import ClientUpdate, adapted_step_count
+
+        fl, cfg = self.fl, self.async_cfg
         train_fn = self._client_train_fn()
         use_mask = self.sparse_update and self.clients[0].neuron_mask is not None
+        delta_mode = cfg.merge_mode == "delta"
+
+        def _cap(ci: int, n_sel: int) -> Optional[int]:
+            if not cfg.adapt_steps:
+                return None
+            return adapted_step_count(
+                n_sel, sched.scenario.rel_speed(ci), cfg.min_steps
+            )
 
         def plan(ci: int, t: int) -> int:
             sel = curr.selected_batch_ids(self.schedule, t, self.clients[ci].order)
-            return len(sel) * fl.local_epochs
+            cap = _cap(ci, len(sel))
+            n_sel = len(sel) if cap is None else min(cap, len(sel))
+            return n_sel * fl.local_epochs
 
         def train(ci: int, t: int, version: int) -> ClientUpdate:
             client = self.clients[ci]
+            n_sel = len(curr.selected_batch_ids(self.schedule, t, client.order))
+            cap = _cap(ci, n_sel)
             batch_idx, step_valid = curr.step_plan(
-                self.schedule, t, [client.order], fl.local_epochs
+                self.schedule, t, [client.order], fl.local_epochs,
+                max_selected=None if cap is None else [cap],
             )
             mask_arg = client.neuron_mask if use_mask else jnp.zeros(())
+            pulled = self._global.front  # the version this client pulls
             new_lora, new_opt, losses = train_fn(
                 self.params,
-                self._global.front,  # the version this client pulls
+                pulled,
                 client.lora,  # donated: the client trains in place
                 client.opt_state,  # donated
                 mask_arg,
@@ -818,10 +895,15 @@ class FibecFed:
                 jnp.float32(lr),
             )
             client.lora, client.opt_state = new_lora, new_opt
+            # delta against the pulled version, extracted now — by merge
+            # time this version may already be retired from the double
+            # buffer (staleness >= 2), so it cannot be recovered later
+            delta = self._delta_fn()(new_lora, pulled) if delta_mode else None
             n_steps = int(step_valid.sum())
             return ClientUpdate(
                 client=ci,
                 lora=new_lora,
+                delta=delta,
                 losses=losses,
                 step_valid=step_valid[0],
                 n_samples=client.n,
@@ -847,13 +929,17 @@ class FibecFed:
         fl = self.fl
         lr = fl.learning_rate if lr is None else lr
         sched = self._ensure_scheduler()
-        plan, train = self._async_callbacks(lr)
+        plan, train = self._async_callbacks(lr, sched)
         result = sched.run_until_merge(t, plan, train)
 
-        stacked = jax.tree.map(
-            lambda *xs: jnp.stack(xs), *[u.lora for u in result.updates]
-        )
-        new_global = self._merge_fn()(
+        if self.async_cfg.merge_mode == "delta":
+            payloads = [u.delta for u in result.updates]
+            merge = self._delta_merge_fn()
+        else:
+            payloads = [u.lora for u in result.updates]
+            merge = self._merge_fn()
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *payloads)
+        new_global = merge(
             self._global.front,
             self._gal_mask_tree,
             stacked,
@@ -869,8 +955,11 @@ class FibecFed:
             num += float(np.sum(losses * valid))
             den += float(np.sum(valid))
 
+        # completions pay the round trip whether or not the staleness cutoff
+        # later discards them — the bytes were already on the wire
         self.comm_bytes_per_round.append(
-            result.completed * self._gal_bytes_per_client()
+            (result.completed + result.stale_dropped)
+            * self._gal_bytes_per_client()
         )
         return {
             "loss": num / max(den, 1.0),
@@ -882,6 +971,8 @@ class FibecFed:
             "staleness_mean": float(result.staleness.mean()),
             "merged_clients": float(result.completed),
             "dropped_clients": float(result.dropped),
+            "stale_dropped": float(result.stale_dropped),
+            "buffer_size": float(sched.buffer_size),
             "padded_steps": float(
                 max(len(np.asarray(u.step_valid)) for u in result.updates)
             ),

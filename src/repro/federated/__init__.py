@@ -4,6 +4,10 @@ from repro.federated.async_agg import (
     ClientUpdate,
     DoubleBufferedGlobal,
     MergeResult,
+    adapted_buffer_size,
+    adapted_step_count,
+    cohort_weights,
+    delta_weights,
     staleness_weights,
 )
 from repro.federated.baselines import BASELINES, make_runner, run_experiment

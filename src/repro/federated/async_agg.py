@@ -30,12 +30,46 @@ Clients in flight or awaiting aggregation are excluded from re-dispatch, so
 one client never holds two pending updates (this is also what keeps the
 jitted per-client train program free to donate its LoRA/optimizer buffers).
 
+On top of the FedBuff core sit four **adaptive policies**, each a knob on
+:class:`AsyncAggConfig` and each an exact no-op at its default:
+
+* **delta merges** (``merge_mode="delta"``) — FedAsync-style (Xie et al.):
+  clients report *deltas* against the version they pulled, and the server
+  applies ``global += eta(tau) * sum_i w_i * delta_i`` with an *absolute*
+  per-update learning rate ``eta(tau_i) = server_lr * (1 + tau_i) **
+  -staleness_power`` (:func:`delta_weights`). Unlike the buffered value
+  merge, a stale buffer genuinely moves the global less — the right regime
+  when staleness is heavy. At ``server_lr=1`` and staleness 0 it reduces
+  exactly to the buffered FedAvg;
+* **staleness cutoff** (``staleness_cutoff=b``) — updates strictly older
+  than ``b`` merges are discarded at flush time (their clients become
+  dispatchable again; an update *exactly at* the bound still merges);
+* **adaptive buffer size** (``adapt_buffer=True``) — the flush threshold K
+  tracks the observed completion rate (:func:`adapted_buffer_size`): a
+  window where most dispatches drop shrinks K so the server stops waiting
+  for completions that are not coming, a healthy window restores it;
+* **wall-clock-aware cohort sampling** (``sampling_bias>0``) — dispatch
+  prefers fast clients early in the curriculum ramp and folds stragglers in
+  as the ramp completes (:func:`cohort_weights`), so early merges follow
+  the fast cohort's cadence and slow devices mostly see the late,
+  full-data curriculum.
+
+Client-side **step-count adaptation** (``adapt_steps=True``) lives with the
+runner (it needs the curriculum), but its policy function is here too
+(:func:`adapted_step_count`): a device ``r`` times slower than the fastest
+trains ``ceil(n/r)`` of its selected curriculum batches per pull — the
+easiest prefix, preserving curriculum order — so stragglers report back on
+the fast cohort's cadence instead of arriving hopelessly stale.
+
 Degenerate configuration = synchronous FedAvg: under the homogeneous
 scenario with ``buffer_size == concurrency == cohort size``, every wave
 pulls the same version (staleness 0), the buffer flushes exactly once per
 wave with sample-count weights, and the merge reproduces the synchronous
 engines' round — CI enforces allclose equivalence against ``engine="loop"``
-in ``tests/test_engine_equivalence.py``.
+in ``tests/test_engine_equivalence.py``. Every adaptive policy reduces to
+this baseline when disabled (and the enabled policies are themselves inert
+in degenerate conditions: ``adapt_steps`` under uniform speeds, a cutoff
+nothing exceeds, ``adapt_buffer`` with no drops).
 
 The scheduler is deliberately decoupled from FibecFed: it knows nothing
 about JAX or LoRA trees, only ``plan``/``train`` callbacks and opaque update
@@ -57,9 +91,14 @@ from repro.federated.hetero import BoundScenario
 T = TypeVar("T")
 
 
+MERGE_MODES = ("buffered", "delta")
+
+
 @dataclasses.dataclass(frozen=True)
 class AsyncAggConfig:
-    """Server-side knobs of the buffered async aggregator.
+    """Server- and client-side knobs of the async aggregator.
+
+    Core FedBuff knobs:
 
     ``buffer_size`` (K) — completions per merge; ``concurrency`` (M) — target
     clients in flight. Both default to the cohort size
@@ -68,17 +107,53 @@ class AsyncAggConfig:
     discount ``s(tau) = (1 + tau) ** -a`` (0.5 in the FedBuff paper; 0
     disables staleness weighting entirely).
 
-    Note the discount is *relative within one buffer* (weights renormalize
-    to 1 over the K merged updates, preserving the value-merge FedAvg
-    invariant): a stale update loses influence to fresher buffer-mates, but
-    with K=1 every flush has weight 1.0 regardless of staleness. Absolute
-    staleness damping needs delta-based merges with a server learning rate
-    (FedAsync-style) — a ROADMAP follow-on.
+    Merge mode:
+
+    ``merge_mode`` — ``"buffered"`` (default) merges client *values* with
+    weights renormalized to 1 over the buffer: a stale update loses
+    influence to fresher buffer-mates, but with K=1 every flush has weight
+    1.0 regardless of staleness (the discount is relative). ``"delta"``
+    merges client *deltas* (FedAsync-style) with the absolute per-update
+    rate ``server_lr * (1 + tau) ** -staleness_power`` on top of the FedAvg
+    sample weights, NOT renormalized — a stale flush genuinely moves the
+    global less. ``server_lr`` is eta, the server learning rate of the
+    delta merge (ignored in buffered mode); at ``server_lr=1`` and
+    staleness 0 the two modes coincide exactly.
+
+    Adaptive policies (each an exact no-op at its default):
+
+    ``staleness_cutoff`` — discard buffered updates strictly older than this
+    many merges at flush time (an update exactly at the bound still
+    merges); their clients become dispatchable again. ``None`` disables.
+    ``adapt_buffer`` — adapt the flush threshold K to the observed
+    completion rate after every merge (see :func:`adapted_buffer_size`),
+    clipped to ``[min_buffer_size, max_buffer_size]`` (``max_buffer_size``
+    ``None`` = the initial K; the policy only shrinks K below the initial
+    value and recovers back to it, so a larger ``max_buffer_size`` is
+    inert).
+    ``adapt_steps`` — slow clients train fewer curriculum steps per pull:
+    a device ``r`` times slower than the fastest trains ``ceil(n/r)`` of
+    its selected batches, never below ``min_steps`` (see
+    :func:`adapted_step_count`; applied by the runner, which owns the
+    curriculum).
+    ``sampling_bias`` — strength of wall-clock-aware cohort sampling: > 0
+    weights dispatch toward fast clients early in the curriculum ramp,
+    relaxing to uniform as the ramp completes (see :func:`cohort_weights`).
+    0 preserves the synchronous engines' exact RNG consumption.
     """
 
     buffer_size: Optional[int] = None
     concurrency: Optional[int] = None
     staleness_power: float = 0.5
+    merge_mode: str = "buffered"
+    server_lr: float = 1.0
+    staleness_cutoff: Optional[int] = None
+    adapt_buffer: bool = False
+    min_buffer_size: int = 1
+    max_buffer_size: Optional[int] = None
+    adapt_steps: bool = False
+    min_steps: int = 1
+    sampling_bias: float = 0.0
 
     def __post_init__(self):
         if self.buffer_size is not None and self.buffer_size < 1:
@@ -87,6 +162,24 @@ class AsyncAggConfig:
             raise ValueError("concurrency must be >= 1")
         if self.staleness_power < 0.0:
             raise ValueError("staleness_power must be >= 0")
+        if self.merge_mode not in MERGE_MODES:
+            raise ValueError(
+                f"merge_mode must be one of {MERGE_MODES}, got {self.merge_mode!r}"
+            )
+        if self.server_lr <= 0.0:
+            raise ValueError("server_lr must be > 0")
+        if self.staleness_cutoff is not None and self.staleness_cutoff < 0:
+            raise ValueError("staleness_cutoff must be >= 0")
+        if self.min_buffer_size < 1:
+            raise ValueError("min_buffer_size must be >= 1")
+        if self.max_buffer_size is not None and (
+            self.max_buffer_size < self.min_buffer_size
+        ):
+            raise ValueError("max_buffer_size must be >= min_buffer_size")
+        if self.min_steps < 1:
+            raise ValueError("min_steps must be >= 1")
+        if self.sampling_bias < 0.0:
+            raise ValueError("sampling_bias must be >= 0")
 
 
 def staleness_weights(
@@ -107,6 +200,99 @@ def staleness_weights(
     if not total > 0:
         raise ValueError("merge weights sum to zero (empty or zero-sample buffer)")
     return w / total
+
+
+def delta_weights(
+    n_samples: Sequence[float],
+    staleness: Sequence[int],
+    power: float,
+    server_lr: float = 1.0,
+) -> np.ndarray:
+    """Per-update rates of the FedAsync-style delta merge.
+
+    ``w_i = server_lr * (n_i / sum(n)) * (1 + tau_i) ** -power`` — FedAvg's
+    sample weights scaled by the server learning rate and an *absolute*
+    staleness discount: unlike :func:`staleness_weights` the result is NOT
+    renormalized, so a buffer of stale deltas moves the global less in
+    absolute terms (with K=1 a tau-stale delta lands at
+    ``server_lr * (1+tau)^-power``, not 1.0). At ``server_lr=1`` and all
+    ``tau_i == 0`` this equals :func:`staleness_weights` exactly, which is
+    what makes the delta merge reduce to the buffered value merge.
+    """
+    n = np.asarray(n_samples, np.float64)
+    tau = np.asarray(staleness, np.float64)
+    if np.any(tau < 0):
+        raise ValueError("staleness must be non-negative")
+    total = n.sum()
+    if not total > 0:
+        raise ValueError("merge weights sum to zero (empty or zero-sample buffer)")
+    return server_lr * (n / total) * (1.0 + tau) ** -power
+
+
+def adapted_buffer_size(
+    base: int,
+    completion_rate: float,
+    min_size: int = 1,
+    max_size: Optional[int] = None,
+) -> int:
+    """Flush threshold K adapted to the observed completion rate.
+
+    ``clip(round(base * completion_rate), min_size, max_size)`` with
+    ``max_size`` defaulting to ``base``. A window where every dispatch
+    dropped (rate 0 — e.g. the whole fleet off its chargers) clamps to
+    ``min_size`` rather than 0, so the server merges whatever does arrive
+    instead of waiting forever; a healthy window (rate 1) restores ``base``.
+    Note the policy only *shrinks* K below ``base`` and recovers back to
+    it — with the rate capped at 1, a ``max_size`` above ``base`` is inert.
+    """
+    if not 0.0 <= completion_rate <= 1.0:
+        raise ValueError("completion_rate must be in [0, 1]")
+    max_size = base if max_size is None else max_size
+    if min_size > max_size:
+        raise ValueError(
+            f"min_size {min_size} exceeds max_size {max_size}; the clip "
+            "would silently ignore the floor"
+        )
+    return int(np.clip(int(round(base * completion_rate)), min_size, max_size))
+
+
+def adapted_step_count(n_steps: int, rel_speed: float, min_steps: int = 1) -> int:
+    """Per-pull step budget for a device ``rel_speed`` times slower than the
+    fastest: ``max(min_steps, ceil(n_steps / rel_speed))``.
+
+    Equalizes virtual compute time across the fleet — a 4x straggler trains
+    a quarter of its selected curriculum batches (the *easiest* prefix,
+    preserving curriculum order) and reports back on the fast cohort's
+    cadence instead of arriving hopelessly stale. ``rel_speed <= 1`` (the
+    fastest device, or a homogeneous fleet) is the identity, so the policy
+    is inert exactly when there is nothing to adapt to.
+    """
+    if n_steps < 1:
+        raise ValueError("n_steps must be >= 1")
+    if rel_speed <= 1.0:
+        return max(min_steps, n_steps)
+    return max(min_steps, int(np.ceil(n_steps / rel_speed)))
+
+
+def cohort_weights(speed: np.ndarray, bias: float, progress: float) -> np.ndarray:
+    """Wall-clock-aware dispatch probabilities over the available clients.
+
+    ``w_i \\propto speed_i ** (-bias * (1 - progress))`` normalized to 1,
+    where ``speed_i`` is the scenario slowdown multiplier (1.0 = fastest)
+    and ``progress`` the curriculum ramp progress in [0, 1]. Early in the
+    ramp (progress 0) a bias of 2 makes a 4x straggler 16x less likely per
+    draw than a fast client; at progress 1 the weights are exactly uniform —
+    stragglers (and their data) fold in as the curriculum reaches full data,
+    so no client's distribution is excluded from the converged model.
+    """
+    if bias < 0.0:
+        raise ValueError("bias must be >= 0")
+    s = np.asarray(speed, np.float64)
+    if np.any(s <= 0):
+        raise ValueError("speeds must be positive")
+    progress = float(min(max(progress, 0.0), 1.0))
+    w = s ** (-bias * (1.0 - progress))
+    return w / w.sum()
 
 
 class DoubleBufferedGlobal(Generic[T]):
@@ -140,6 +326,7 @@ class ClientUpdate:
 
     client: int
     lora: Any  # trained client LoRA tree (GAL part merged at flush)
+    delta: Any  # lora - pulled global (delta merge mode only; else None)
     losses: Any  # (S,) per-step training losses, padded steps included
     step_valid: Any  # (S,) f32 mask of real (non-padded) steps
     n_samples: int
@@ -171,15 +358,22 @@ class _Event:
 
 @dataclasses.dataclass
 class MergeResult:
-    """One buffer flush: the updates to merge and their final weights."""
+    """One buffer flush: the updates to merge and their final weights.
+
+    ``weights`` are normalized staleness-discounted FedAvg weights in
+    buffered mode, or the absolute (server-lr-scaled, NOT renormalized)
+    per-delta rates in delta mode — either way the values the runner's
+    fused merge program contracts the stacked updates with.
+    """
 
     updates: List[Any]  # opaque payloads from the train callback
-    weights: np.ndarray  # (K,) normalized staleness-discounted weights
+    weights: np.ndarray  # (K,) merge weights (see class docstring)
     staleness: np.ndarray  # (K,) int merges-behind per update
     clock: float  # virtual time of the flush
     version: int  # global version after this merge is published
     completed: int  # completions consumed by this flush
     dropped: int  # drops observed since the previous flush
+    stale_dropped: int = 0  # completions discarded by the staleness cutoff
 
 
 class AsyncScheduler:
@@ -195,6 +389,9 @@ class AsyncScheduler:
     available a wave consumes it exactly like the synchronous engines' <<one
     ``choice(num_clients, k)`` per round>>, so equivalence holds seed-for-
     seed; scenario randomness lives on the BoundScenario's own stream.
+    ``progress`` maps a server round to the curriculum ramp progress in
+    [0, 1] (only consulted when ``cfg.sampling_bias > 0``); without one the
+    scheduler assumes a completed ramp, i.e. uniform sampling.
     """
 
     def __init__(
@@ -205,6 +402,7 @@ class AsyncScheduler:
         scenario: BoundScenario,
         rng: np.random.Generator,
         cfg: Optional[AsyncAggConfig] = None,
+        progress: Optional[Callable[[int], float]] = None,
     ):
         cfg = cfg or AsyncAggConfig()
         self.num_clients = num_clients
@@ -219,6 +417,22 @@ class AsyncScheduler:
                 f"concurrency must be in [1, {num_clients}], got {self.concurrency}"
             )
         self.staleness_power = cfg.staleness_power
+        self.merge_mode = cfg.merge_mode
+        self.server_lr = cfg.server_lr
+        self.staleness_cutoff = cfg.staleness_cutoff
+        self.adapt_buffer = cfg.adapt_buffer
+        self.base_buffer_size = self.buffer_size
+        self.min_buffer_size = cfg.min_buffer_size
+        self.max_buffer_size = min(
+            cfg.max_buffer_size or self.buffer_size, num_clients
+        )
+        if self.min_buffer_size > self.max_buffer_size:
+            raise ValueError(
+                f"min_buffer_size {self.min_buffer_size} exceeds the "
+                f"effective max buffer size {self.max_buffer_size}"
+            )
+        self.sampling_bias = cfg.sampling_bias
+        self.progress = progress or (lambda t: 1.0)
         self.scenario = scenario
         self.rng = rng
         self.clock = 0.0
@@ -228,7 +442,10 @@ class AsyncScheduler:
         self.last_merge_weights: Optional[np.ndarray] = None
         self.total_completed = 0
         self.total_dropped = 0
+        self.total_stale_dropped = 0
         self._dropped_since_flush = 0
+        self._stale_since_flush = 0
+        self._rate_ema: Optional[float] = None
         self._heap: List[_Event] = []
         self._seq = itertools.count()
 
@@ -247,7 +464,16 @@ class AsyncScheduler:
         count = min(want, len(avail))
         if count <= 0:
             return 0
-        if len(avail) == self.num_clients:
+        if self.sampling_bias > 0.0:
+            # wall-clock-aware sampling: prefer fast clients while the
+            # curriculum ramp is young, uniform once it completes
+            p = cohort_weights(
+                self.scenario.speed[np.asarray(avail)],
+                self.sampling_bias,
+                self.progress(round_t),
+            )
+            chosen = self.rng.choice(np.asarray(avail), count, replace=False, p=p)
+        elif len(avail) == self.num_clients:
             # same RNG call as the synchronous engines' cohort sampling
             chosen = self.rng.choice(self.num_clients, count, replace=False)
         else:
@@ -293,20 +519,47 @@ class AsyncScheduler:
             self.buffer.append(ev.payload)
             self.total_completed += 1
             if len(self.buffer) >= self.buffer_size:
-                return self._flush()
+                result = self._flush()
+                if result is not None:
+                    return result
+                # every buffered update was over the staleness cutoff — the
+                # stale clients are free again; re-dispatch and keep
+                # advancing the clock until fresh completions arrive
+                self._dispatch(round_t, plan, train)
 
-    def _flush(self) -> MergeResult:
+    def _flush(self) -> Optional[MergeResult]:
         updates, self.buffer = self.buffer, []
+        if self.staleness_cutoff is not None:
+            # strictly-older-than-the-bound updates are discarded (their
+            # clients become dispatchable again); exactly-at-bound merges
+            fresh = [
+                u
+                for u in updates
+                if self.version - u.pulled_version <= self.staleness_cutoff
+            ]
+            n_stale = len(updates) - len(fresh)
+            self.total_stale_dropped += n_stale
+            self._stale_since_flush += n_stale
+            updates = fresh
+            if not updates:
+                return None
         staleness = np.asarray(
             [self.version - u.pulled_version for u in updates], np.int64
         )
-        weights = staleness_weights(
-            [u.n_samples for u in updates], staleness, self.staleness_power
-        )
+        if self.merge_mode == "delta":
+            weights = delta_weights(
+                [u.n_samples for u in updates], staleness, self.staleness_power,
+                self.server_lr,
+            )
+        else:
+            weights = staleness_weights(
+                [u.n_samples for u in updates], staleness, self.staleness_power
+            )
         self.version += 1
         self.last_merge_weights = weights
         dropped, self._dropped_since_flush = self._dropped_since_flush, 0
-        return MergeResult(
+        stale_dropped, self._stale_since_flush = self._stale_since_flush, 0
+        result = MergeResult(
             updates=updates,
             weights=weights,
             staleness=staleness,
@@ -314,4 +567,23 @@ class AsyncScheduler:
             version=self.version,
             completed=len(updates),
             dropped=dropped,
+            stale_dropped=stale_dropped,
+        )
+        if self.adapt_buffer:
+            self._adapt_buffer_size(result)
+        return result
+
+    def _adapt_buffer_size(self, result: MergeResult) -> None:
+        """Track the completion rate of the window since the previous flush
+        (EMA over flush windows, momentum 0.5) and re-aim K at it."""
+        arrived = result.completed + result.stale_dropped
+        rate = arrived / max(1, arrived + result.dropped)
+        self._rate_ema = (
+            rate if self._rate_ema is None else 0.5 * (self._rate_ema + rate)
+        )
+        self.buffer_size = adapted_buffer_size(
+            self.base_buffer_size,
+            self._rate_ema,
+            self.min_buffer_size,
+            self.max_buffer_size,
         )

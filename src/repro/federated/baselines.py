@@ -56,6 +56,34 @@ def make_runner(
     scenario: Any = None,
     async_cfg: Any = None,
 ) -> FibecFed:
+    """Build a :class:`FibecFed` runner from a named baseline preset.
+
+    Args:
+      name: a ``BASELINES`` key (``"fibecfed"`` = the full method; the rest
+        are the paper's comparison rows — each preset fixes
+        ``difficulty_metric``/``gal_mode``/``sparse_update`` and possibly
+        the curriculum strategy).
+      model / loss_fn / fl / client_data: forwarded to ``FibecFed`` — the
+        model bundle, its loss, the FL hyperparameters, and the per-client
+        non-IID data shards.
+      seed: seeds client sampling and parameter init (same seed + same
+        preset => bit-identical curriculum decisions across engines).
+      optimizer: local optimizer, ``"sgd"`` or ``"adamw"``.
+      fused_optimizer: ``True`` uses the fused Pallas masked-update kernels
+        for local steps; ``"force"`` pins the kernel path on every leaf.
+      engine: ``"vectorized"`` (default) | ``"loop"`` | ``"sharded"`` |
+        ``"async"`` — see the ``FibecFed`` class docstring for the matrix.
+      mesh: device mesh for ``engine="sharded"`` (default: all devices).
+      scenario: heterogeneity preset (name or ``ScenarioPreset``) for
+        ``engine="async"``.
+      async_cfg: ``AsyncAggConfig`` for ``engine="async"`` — buffer
+        size, staleness discount, and the adaptive policies (delta merges,
+        staleness cutoff, buffer/step adaptation, sampling bias).
+
+    Returns:
+      An un-initialized runner: call ``init_phase()`` once, then
+      ``run_round(t)`` per round (or drive it with ``run_experiment``).
+    """
     preset = dict(BASELINES[name])
     curriculum = preset.pop("curriculum", None)
     if curriculum is not None:

@@ -57,6 +57,24 @@ class ScenarioPreset:
     All fields are virtual-time or probability knobs; ``1.0`` speed and all
     zeros elsewhere is the homogeneous scenario in which the async engine
     must reduce exactly to the synchronous ones.
+
+    Fields (all keyword-constructible; ``with_`` tweaks a copy):
+
+    * ``name`` — registry key (``SCENARIOS``) and compose label;
+    * ``slow_fraction`` — fraction of clients assigned to the slow group
+      (a seeded permutation picks which);
+    * ``slow_factor`` — the slow group's speed multiplier (>= 1.0; 4.0 =
+      a 4x straggler);
+    * ``jitter_sigma`` — lognormal sigma on per-dispatch compute time
+      (0 = deterministic, consumes no RNG);
+    * ``dropout_prob`` — probability a dispatched client never reports
+      back (i.i.d. per dispatch, in [0, 1));
+    * ``comm_latency`` — virtual seconds per transfer (a round trip pays
+      it twice: pull + push);
+    * ``burst_period`` — > 0 aligns dispatch starts to multiples of this
+      period (bunched arrivals, e.g. overnight charging windows);
+    * ``step_time`` — virtual seconds per curriculum step on the
+      reference (speed 1.0) device.
     """
 
     name: str = "uniform"
@@ -117,6 +135,18 @@ class BoundScenario:
     preset: ScenarioPreset
     speed: np.ndarray  # (num_clients,) multiplier, 1.0 = reference device
     rng: np.random.Generator
+
+    def rel_speed(self, client: int) -> float:
+        """Slowdown of ``client`` relative to the *fastest* bound client
+        (>= 1.0; exactly 1.0 for every client of a homogeneous fleet).
+
+        This is the signal the async engine's step-count adaptation paces
+        against (``AsyncAggConfig(adapt_steps=True)``): a device with
+        ``rel_speed`` r trains ``ceil(n / r)`` of its selected curriculum
+        batches per pull, so heterogeneity in compute translates into
+        heterogeneity in work instead of heterogeneity in latency.
+        """
+        return float(self.speed[client] / self.speed.min())
 
     def compute_time(self, client: int, n_steps: int) -> float:
         """Virtual seconds of local training for ``n_steps`` real steps."""

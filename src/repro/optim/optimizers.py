@@ -132,11 +132,26 @@ def adamw_update(grads, state, params, lr, mask=None, active=None, *,
 
 
 def make_optimizer(name: str, fused: bool = False, **kw) -> Tuple[Callable, Callable]:
-    """``fused=True`` routes updates through the fused Pallas masked-update
-    kernels (one read/write pass per leaf, oracle fallback below one tile);
-    ``fused="force"`` additionally forces the kernel path on every leaf
-    regardless of size (kernel-coverage tests / TPU debugging). Both share
-    the frozen-moment semantics of the tree.map implementations above.
+    """Build ``(init_fn, update_fn)`` for a masked local optimizer.
+
+    Args:
+      name: ``"sgd"`` or ``"adamw"``.
+      fused: ``False`` (default) uses the pure tree.map implementations
+        above — the semantic spec. ``True`` routes updates through the
+        fused Pallas masked-update kernels (one read/write pass per leaf,
+        oracle fallback below one tile); ``"force"`` additionally forces
+        the kernel path on every leaf regardless of size (kernel-coverage
+        tests / TPU debugging). All paths share the frozen-moment
+        semantics documented in the module docstring.
+      **kw: optimizer hyperparameters, closed over statically (never
+        traced): ``momentum`` (sgd, default 0.0); ``b1``/``b2``/``eps``/
+        ``weight_decay`` (adamw, defaults 0.9/0.999/1e-8/0.0).
+
+    Returns:
+      ``init_fn(params) -> state`` and ``update_fn(grads, state, params,
+      lr, mask=None, active=None) -> (new_params, new_state)`` — ``mask``
+      is the per-entry 0/1 keep-mask pytree, ``active`` the per-step no-op
+      predicate (0/1 scalar); both default to all-on.
     """
     if fused:
         # lazy: the kernel layer is only a dependency of the fused path

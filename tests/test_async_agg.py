@@ -19,6 +19,10 @@ from repro.federated.async_agg import (
     AsyncAggConfig,
     AsyncScheduler,
     DoubleBufferedGlobal,
+    adapted_buffer_size,
+    adapted_step_count,
+    cohort_weights,
+    delta_weights,
     staleness_weights,
 )
 from repro.federated.hetero import (
@@ -65,6 +69,104 @@ def test_staleness_weights_rejects_bad_inputs():
         staleness_weights([1, 1], [0, -1], power=0.5)
     with pytest.raises(ValueError):
         staleness_weights([0, 0], [0, 0], power=0.5)
+
+
+# ---------------------------------------------------------------------------
+# adaptive policy functions
+# ---------------------------------------------------------------------------
+
+
+def test_delta_weights_reduce_to_fedavg_at_eta1_staleness0():
+    """The exact condition under which the delta merge equals the buffered
+    value merge: server_lr 1, all staleness 0."""
+    n = np.array([10, 30, 60])
+    np.testing.assert_allclose(
+        delta_weights(n, [0, 0, 0], power=0.5, server_lr=1.0),
+        staleness_weights(n, [0, 0, 0], power=0.5),
+    )
+
+
+def test_delta_weights_absolute_discount_not_renormalized():
+    # a lone stale delta really lands at eta * (1+tau)^-a, NOT at 1.0 the
+    # way the renormalized buffered weights would
+    w = delta_weights([10], [3], power=0.5, server_lr=1.0)
+    assert w[0] == pytest.approx(0.5)
+    assert staleness_weights([10], [3], power=0.5)[0] == pytest.approx(1.0)
+    # server_lr scales every weight; a uniformly stale buffer sums below eta
+    w = delta_weights([10, 10], [4, 4], power=0.5, server_lr=0.6)
+    assert w.sum() == pytest.approx(0.6 / np.sqrt(5))
+    with pytest.raises(ValueError):
+        delta_weights([1], [-1], power=0.5)
+    with pytest.raises(ValueError):
+        delta_weights([0], [0], power=0.5)
+
+
+def test_adapted_buffer_size_bounds():
+    # healthy window restores the base K; a 100%-dropout window (rate 0)
+    # clamps to min_size instead of 0 so the server still merges arrivals
+    assert adapted_buffer_size(8, 1.0) == 8
+    assert adapted_buffer_size(8, 0.0) == 1
+    assert adapted_buffer_size(8, 0.0, min_size=2) == 2
+    assert adapted_buffer_size(8, 0.5) == 4
+    assert adapted_buffer_size(8, 1.0, max_size=6) == 6
+    with pytest.raises(ValueError):
+        adapted_buffer_size(8, 1.5)
+    with pytest.raises(ValueError):  # floor above the cap: refuse, not clip
+        adapted_buffer_size(2, 1.0, min_size=3)
+
+
+def test_scheduler_rejects_min_buffer_above_effective_max():
+    with pytest.raises(ValueError):
+        make_scheduler(
+            "uniform", buffer_size=2, min_buffer_size=3, adapt_buffer=True
+        )
+
+
+def test_adapted_step_count_minimum_bucket():
+    """Step adaptation hitting the minimum: an arbitrarily slow device still
+    trains min_steps (and bucket_size keeps it a 1-step program)."""
+    assert adapted_step_count(8, rel_speed=4.0) == 2
+    assert adapted_step_count(5, rel_speed=4.0) == 2  # ceil(5/4)
+    assert adapted_step_count(8, rel_speed=1.0) == 8  # fastest: identity
+    assert adapted_step_count(8, rel_speed=0.5) == 8  # guard: never grows
+    assert adapted_step_count(1, rel_speed=1000.0) == 1
+    assert adapted_step_count(8, rel_speed=1000.0, min_steps=2) == 2
+    assert bucket_size(adapted_step_count(1, rel_speed=1000.0)) == 1
+    with pytest.raises(ValueError):
+        adapted_step_count(0, rel_speed=1.0)
+
+
+def test_cohort_weights_ramp_interpolation():
+    speed = np.array([1.0, 1.0, 4.0, 4.0])
+    early = cohort_weights(speed, bias=2.0, progress=0.0)
+    assert early.sum() == pytest.approx(1.0)
+    # bias 2 at progress 0: a 4x straggler is 16x less likely per draw
+    assert early[0] / early[2] == pytest.approx(16.0)
+    late = cohort_weights(speed, bias=2.0, progress=1.0)
+    np.testing.assert_allclose(late, 0.25)  # uniform once the ramp is done
+    mid = cohort_weights(speed, bias=2.0, progress=0.5)
+    assert early[2] < mid[2] < late[2]  # stragglers fold in monotonically
+    with pytest.raises(ValueError):
+        cohort_weights(speed, bias=-1.0, progress=0.0)
+    with pytest.raises(ValueError):
+        cohort_weights(np.array([0.0, 1.0]), bias=1.0, progress=0.0)
+
+
+def test_async_cfg_validates_adaptive_fields():
+    with pytest.raises(ValueError):
+        AsyncAggConfig(merge_mode="nope")
+    with pytest.raises(ValueError):
+        AsyncAggConfig(server_lr=0.0)
+    with pytest.raises(ValueError):
+        AsyncAggConfig(staleness_cutoff=-1)
+    with pytest.raises(ValueError):
+        AsyncAggConfig(min_buffer_size=0)
+    with pytest.raises(ValueError):
+        AsyncAggConfig(min_buffer_size=4, max_buffer_size=2)
+    with pytest.raises(ValueError):
+        AsyncAggConfig(min_steps=0)
+    with pytest.raises(ValueError):
+        AsyncAggConfig(sampling_bias=-0.1)
 
 
 # ---------------------------------------------------------------------------
@@ -164,13 +266,14 @@ def make_stub_callbacks(trained, n_steps=3):
     return plan, train
 
 
-def make_scheduler(preset, *, num_clients=8, cohort=4, seed=0, **cfg_kw):
+def make_scheduler(preset, *, num_clients=8, cohort=4, seed=0, progress=None, **cfg_kw):
     return AsyncScheduler(
         num_clients=num_clients,
         cohort_size=cohort,
         scenario=get_scenario(preset).bind(num_clients, seed=seed),
         rng=np.random.default_rng(seed),
         cfg=AsyncAggConfig(**cfg_kw) if cfg_kw else None,
+        progress=progress,
     )
 
 
@@ -242,6 +345,127 @@ def test_scheduler_no_client_holds_two_pending_updates():
         sched.run_until_merge(t, plan, train)
         busy = [u.client for u in sched.buffer] + sorted(sched.in_flight)
         assert len(busy) == len(set(busy))
+
+
+def _skew_preset(factor=10.0):
+    return ScenarioPreset(name="skew", slow_fraction=0.5, slow_factor=factor)
+
+
+def test_scheduler_staleness_cutoff_drops_strictly_older():
+    """The 10x straggler's update lands 9 merges behind its pull: a cutoff
+    of 5 discards it (the buffer flush skips it and the next fresh
+    completion merges instead), counting it in ``stale_dropped``."""
+    sched = make_scheduler(
+        _skew_preset(), num_clients=2, cohort=2, seed=0,
+        buffer_size=1, staleness_cutoff=5,
+    )
+    plan, train = make_stub_callbacks([])
+    results = [sched.run_until_merge(t, plan, train) for t in range(10)]
+    slow_ci = int(np.argmax(sched.scenario.speed))
+    # the straggler never merges; every returned flush is the fast client
+    for r in results:
+        assert all(u.client != slow_ci for u in r.updates)
+        assert all(tau <= 5 for tau in r.staleness)
+    assert sched.total_stale_dropped >= 1
+    assert sum(r.stale_dropped for r in results) == sched.total_stale_dropped
+    # ...and the stale-dropped client went back into circulation
+    assert slow_ci not in {u.client for r in results for u in r.updates}
+    assert slow_ci in sched.in_flight or any(
+        u.client == slow_ci for u in sched.buffer
+    )
+
+
+def test_scheduler_staleness_exactly_at_cutoff_still_merges():
+    """Boundary semantics: tau == cutoff is fresh enough. With cutoff=9 the
+    tau-9 straggler update from the classic skew trace must merge exactly as
+    it does with no cutoff at all."""
+    sched = make_scheduler(
+        _skew_preset(), num_clients=2, cohort=2, seed=0,
+        buffer_size=1, staleness_cutoff=9,
+    )
+    plan, train = make_stub_callbacks([])
+    results = [sched.run_until_merge(t, plan, train) for t in range(10)]
+    slow_ci = int(np.argmax(sched.scenario.speed))
+    slow_merge = results[9]
+    assert [u.client for u in slow_merge.updates] == [slow_ci]
+    assert list(slow_merge.staleness) == [9]
+    assert slow_merge.stale_dropped == 0
+    assert sched.total_stale_dropped == 0
+
+
+def test_scheduler_adapts_buffer_to_completion_rate():
+    """Heavy dropout shrinks the flush threshold K toward the completion
+    rate; K never leaves [min_buffer_size, base]."""
+    sched = make_scheduler(
+        "dropout", seed=2, buffer_size=4, adapt_buffer=True,
+    )
+    sched.scenario.preset = sched.scenario.preset.with_(dropout_prob=0.6)
+    plan, train = make_stub_callbacks([])
+    sizes = []
+    for t in range(8):
+        r = sched.run_until_merge(t, plan, train)
+        assert r.completed >= 1
+        sizes.append(sched.buffer_size)
+    assert all(1 <= s <= 4 for s in sizes)
+    assert min(sizes) < 4  # the 60%-drop regime really shrank K
+    assert sched.total_dropped > 0
+
+
+def test_scheduler_adapts_buffer_to_all_drop_window():
+    """A window where (almost) every dispatch dropped drives the EMA toward
+    0 and K to min_buffer_size — the server must not wait for a full buffer
+    that can never fill."""
+    import dataclasses as dc
+
+    from repro.federated.async_agg import MergeResult
+
+    sched = make_scheduler("uniform", buffer_size=4, adapt_buffer=True)
+    stub = MergeResult(
+        updates=[], weights=np.ones(1), staleness=np.zeros(1, np.int64),
+        clock=0.0, version=1, completed=0, dropped=64, stale_dropped=0,
+    )
+    for _ in range(6):  # EMA converges to the all-drop rate
+        sched._adapt_buffer_size(dc.replace(stub))
+    assert sched.buffer_size == 1
+
+
+def test_scheduler_sampling_bias_prefers_fast_early():
+    """With a strong bias and a young ramp (progress 0) the first merges
+    draw only from the fast half; with the ramp done (progress 1) the slow
+    clients participate again."""
+    for progress, expect_slow in ((0.0, False), (1.0, True)):
+        sched = make_scheduler(
+            _skew_preset(4.0), num_clients=8, cohort=4, seed=1,
+            buffer_size=4, sampling_bias=16.0,
+            progress=lambda t, p=progress: p,
+        )
+        plan, train = make_stub_callbacks([])
+        merged = [
+            u.client
+            for t in range(4)
+            for u in sched.run_until_merge(t, plan, train).updates
+        ]
+        speeds = sched.scenario.speed[np.asarray(merged)]
+        if expect_slow:
+            assert (speeds > 1.0).any()  # stragglers folded in late
+        else:
+            assert (speeds == 1.0).all()  # early merges are fast-only
+
+
+def test_scheduler_delta_mode_flush_weights_are_absolute():
+    """In delta mode a K=1 flush of a tau-stale update gets weight
+    eta * (1+tau)^-a — not the renormalized 1.0 of buffered mode."""
+    sched = make_scheduler(
+        _skew_preset(), num_clients=2, cohort=2, seed=0,
+        buffer_size=1, merge_mode="delta", server_lr=0.5,
+    )
+    plan, train = make_stub_callbacks([])
+    results = [sched.run_until_merge(t, plan, train) for t in range(10)]
+    for r in results[:9]:  # fast client, staleness 0: weight = eta
+        assert r.weights[0] == pytest.approx(0.5)
+    slow = results[9]  # tau = 9: absolute discount on top of eta
+    assert list(slow.staleness) == [9]
+    assert slow.weights[0] == pytest.approx(0.5 * (1 + 9) ** -0.5)
 
 
 def test_scheduler_rejects_impossible_buffer():

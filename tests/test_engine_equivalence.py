@@ -186,6 +186,105 @@ def test_async_equivalent_to_loop(world, baseline, optimizer, fused):
     assert r_async._global.back is not None
 
 
+def test_async_delta_merge_equivalent_to_loop(world):
+    """merge_mode="delta" at server_lr=1 under the homogeneous scenario
+    (staleness 0, full-cohort buffer) must coincide exactly with the
+    buffered value merge — and hence with the loop engine. This is the
+    delta-path equivalence contract: global += sum(w_i * (c_i - g)) with
+    weights summing to 1 IS the weighted FedAvg."""
+    from repro.federated import AsyncAggConfig
+
+    model, loss_fn, client_data = world
+    r_loop, h_loop = _run(world, "fibecfed", "adamw", "loop")
+    r_delta = make_runner(
+        "fibecfed", model, loss_fn, FL, client_data,
+        optimizer="adamw", engine="async", seed=7,
+        async_cfg=AsyncAggConfig(merge_mode="delta", server_lr=1.0),
+    )
+    r_delta.init_phase()
+    h_delta = [r_delta.run_round(t) for t in range(ROUNDS)]
+
+    for hl, hd in zip(h_loop, h_delta):
+        assert hl["loss"] == pytest.approx(hd["loss"], rel=1e-4, abs=1e-5)
+        assert hd["staleness_mean"] == 0.0
+    assert r_loop.comm_bytes_per_round == r_delta.comm_bytes_per_round
+    for a, b in zip(
+        jax.tree.leaves(r_loop.global_lora), jax.tree.leaves(r_delta.global_lora)
+    ):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=5e-5, rtol=1e-4)
+
+
+def test_async_adaptive_policies_inert_when_degenerate(world):
+    """Adaptive knobs that are structurally inert in the homogeneous world —
+    step adaptation (rel_speed 1 everywhere), buffer adaptation (no drops),
+    and a staleness cutoff nothing exceeds — must leave the async engine
+    bit-identical in behavior to its default configuration, i.e. still
+    allclose to the loop engine."""
+    from repro.federated import AsyncAggConfig
+
+    model, loss_fn, client_data = world
+    r_loop, h_loop = _run(world, "fibecfed", "adamw", "loop")
+    r_ada = make_runner(
+        "fibecfed", model, loss_fn, FL, client_data,
+        optimizer="adamw", engine="async", seed=7,
+        async_cfg=AsyncAggConfig(
+            adapt_steps=True, adapt_buffer=True, staleness_cutoff=0
+        ),
+    )
+    r_ada.init_phase()
+    h_ada = [r_ada.run_round(t) for t in range(ROUNDS)]
+    for hl, ha in zip(h_loop, h_ada):
+        assert hl["loss"] == pytest.approx(ha["loss"], rel=1e-4, abs=1e-5)
+        assert hl["selected_batches"] == ha["selected_batches"]
+        assert ha["stale_dropped"] == 0.0
+    assert r_loop.comm_bytes_per_round == r_ada.comm_bytes_per_round
+    for a, b in zip(
+        jax.tree.leaves(r_loop.global_lora), jax.tree.leaves(r_ada.global_lora)
+    ):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=5e-5, rtol=1e-4)
+
+
+def test_async_adaptive_policies_straggler_run(world):
+    """All adaptive policies at once under speed skew: the run stays finite,
+    merged staleness respects the cutoff, the buffer stays within bounds,
+    and step adaptation really shortens the straggler's local round."""
+    from repro.core import curriculum as curr
+    from repro.federated import AsyncAggConfig
+
+    model, loss_fn, client_data = world
+    cfg = AsyncAggConfig(
+        buffer_size=2, merge_mode="delta", server_lr=0.8,
+        staleness_cutoff=2, adapt_buffer=True, adapt_steps=True,
+        sampling_bias=2.0,
+    )
+    runner = make_runner(
+        "fibecfed", model, loss_fn, FL, client_data,
+        optimizer="adamw", engine="async", scenario="straggler",
+        async_cfg=cfg, seed=7,
+    )
+    runner.init_phase()
+    history = [runner.run_round(t) for t in range(8)]
+    for h in history:
+        assert np.isfinite(h["loss"])
+        assert h["staleness_mean"] <= 2.0  # merged updates respect the cutoff
+        assert 1.0 <= h["buffer_size"] <= 2.0
+
+    # the step-adaptation policy really caps the slow client's plan
+    sched = runner._scheduler
+    plan, _ = runner._async_callbacks(FL.learning_rate, sched)
+    slow_ci = int(np.argmax(sched.scenario.speed))
+    fast_ci = int(np.argmin(sched.scenario.speed))
+    assert sched.scenario.rel_speed(slow_ci) == 4.0
+    full = len(
+        curr.selected_batch_ids(runner.schedule, 0, runner.clients[slow_ci].order)
+    )
+    assert plan(slow_ci, 0) == max(1, int(np.ceil(full / 4.0)))
+    full_fast = len(
+        curr.selected_batch_ids(runner.schedule, 0, runner.clients[fast_ci].order)
+    )
+    assert plan(fast_ci, 0) == full_fast  # the fastest device is uncapped
+
+
 def test_async_straggler_scenario_trains(world):
     """Under speed skew + a sub-cohort buffer the async engine merges early
     completions (finite losses, partial cohorts, staleness accrues) and
