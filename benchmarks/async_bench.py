@@ -30,6 +30,14 @@ of the fleet) the async engine's merge cadence follows the fast clients and
 the virtual-time ratio is the headline; ``adaptive_over_async`` isolates
 what the adaptive policies add on top.
 
+A second, orthogonal axis measures **uploaded bytes to the same target
+loss**: the delta-merge async engine uncompressed vs with
+``CompressionConfig(mode="topk", topk_ratio=0.1, topk_values="int8")`` and
+error feedback. Bytes are priced by the configured wire format (values +
+group scales + top-k indices, at each leaf's actual dtype), so
+``compressed_bytes_ratio`` is device-independent and gates in CI via the
+``speedups_device_independent`` block.
+
 All runs share one model/seed/data world; per-client speed assignments are
 identical (``hetero.SCENARIO_SEED_OFFSET``), so the comparison is paired.
 
@@ -182,8 +190,14 @@ def run_async(
         times.append(stats["virtual_time"])
         losses.append(stats["loss"])
         if _smoothed_best(losses)[-1] <= target:
-            return {"reached": True, "time": times[-1], "merges": t + 1}
-    return {"reached": False, "time": times[-1], "merges": max_merges}
+            return {
+                "reached": True, "time": times[-1], "merges": t + 1,
+                "upload_bytes": int(np.sum(runner.comm_upload_bytes_per_round)),
+            }
+    return {
+        "reached": False, "time": times[-1], "merges": max_merges,
+        "upload_bytes": int(np.sum(runner.comm_upload_bytes_per_round)),
+    }
 
 
 def bench_scenario(name: str, *, max_rounds: int, seed: int = 0) -> dict:
@@ -205,6 +219,36 @@ def bench_scenario(name: str, *, max_rounds: int, seed: int = 0) -> dict:
     ada = run_async(
         preset, target=target, max_rounds=max_rounds,
         max_merges=6 * max_rounds, seed=seed, async_cfg=adaptive_cfg(k),
+    )
+    # --- bytes-to-target-loss axis: the same delta-merge async engine,
+    # uncompressed vs int8 top-k + error feedback. Wire bytes are priced by
+    # the configured format (values + scales + indices), so the ratio is
+    # device-independent by construction — it gates in CI like the virtual
+    # speedups do.
+    from repro.federated import CompressionConfig
+
+    delta_cfg = AsyncAggConfig(
+        buffer_size=max(1, k // 2), merge_mode="delta", server_lr=1.0
+    )
+    comp = CompressionConfig(
+        mode="topk", topk_ratio=0.1, topk_values="int8", error_feedback=True
+    )
+    raw = run_async(
+        preset, target=target, max_rounds=max_rounds,
+        max_merges=6 * max_rounds, seed=seed, async_cfg=delta_cfg,
+    )
+    cmp_ = run_async(
+        preset, target=target, max_rounds=max_rounds,
+        max_merges=6 * max_rounds, seed=seed,
+        async_cfg=AsyncAggConfig(
+            buffer_size=max(1, k // 2), merge_mode="delta", server_lr=1.0,
+            compression=comp,
+        ),
+    )
+    bytes_ratio = (
+        raw["upload_bytes"] / cmp_["upload_bytes"]
+        if (raw["reached"] and cmp_["reached"] and cmp_["upload_bytes"])
+        else 0.0
     )
     speedup = sync_time / asy["time"] if asy["reached"] else 0.0
     ada_speedup = sync_time / ada["time"] if ada["reached"] else 0.0
@@ -228,35 +272,47 @@ def bench_scenario(name: str, *, max_rounds: int, seed: int = 0) -> dict:
             if (ada["reached"] and asy["reached"])
             else 0.0
         ),
+        "uncompressed_upload_bytes": raw["upload_bytes"],
+        "uncompressed_reached_target": raw["reached"],
+        "compressed_upload_bytes": cmp_["upload_bytes"],
+        "compressed_reached_target": cmp_["reached"],
+        "compressed_merges": cmp_["merges"],
+        "compressed_bytes_ratio": bytes_ratio,
     }
 
 
 def bench_all(scenarios, *, max_rounds: int) -> tuple:
     """Returns (csv_rows, speedups dict, per-scenario results dict)."""
     results = {s: bench_scenario(s, max_rounds=max_rounds) for s in scenarios}
-    speedups = {}
+    speedups, di_speedups = {}, {}
     for s, r in results.items():
         speedups[f"async_over_sync/{s}"] = r["virtual_speedup"]
         speedups[f"adaptive_over_sync/{s}"] = r["adaptive_speedup"]
         speedups[f"adaptive_over_async/{s}"] = r["adaptive_over_async"]
+        # uploaded-bytes-to-target ratio: wire-format arithmetic on a paired
+        # virtual-clock replay, identical on any host
+        di_speedups[f"compressed_bytes_ratio/{s}"] = r["compressed_bytes_ratio"]
     rows = [
         f"async/{r['scenario']},0.0,"
         f"virtual_speedup={r['virtual_speedup']:.2f}x;"
         f"adaptive_speedup={r['adaptive_speedup']:.2f}x;"
         f"adaptive_over_async={r['adaptive_over_async']:.2f}x;"
+        f"compressed_bytes_ratio={r['compressed_bytes_ratio']:.2f}x;"
         f"sync_vt={r['sync_virtual_time']:.1f};"
         f"async_vt={r['async_virtual_time']:.1f};"
         f"adaptive_vt={r['adaptive_virtual_time']:.1f};"
         f"target={r['target_loss']:.4f};merges={r['async_merges']}"
         for r in results.values()
     ]
-    return rows, speedups, results
+    return rows, speedups, di_speedups, results
 
 
-def write_json(path: str, speedups: dict, results: dict) -> None:
+def write_json(path: str, speedups: dict, di_speedups: dict, results: dict) -> None:
     """BENCH_async.json — compared against benchmarks/baselines/async.json
     by scripts/bench_compare.py (speedup ratios transfer across machines;
-    virtual times are machine-independent by construction)."""
+    virtual times are machine-independent by construction; the
+    ``speedups_device_independent`` block — bytes-to-target ratios — always
+    gates, even across machines with different device counts)."""
     import jax
 
     payload = {
@@ -266,6 +322,7 @@ def write_json(path: str, speedups: dict, results: dict) -> None:
         "batch_size": BATCH_SIZE,
         "scenarios": results,
         "speedups": speedups,
+        "speedups_device_independent": di_speedups,
     }
     with open(path, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)
@@ -275,6 +332,23 @@ def write_json(path: str, speedups: dict, results: dict) -> None:
 def run() -> list:
     """benchmarks.run harness entry point."""
     return bench_all(("straggler",), max_rounds=20)[0]
+
+
+def _main(args) -> int:
+    scenarios = [s for s in args.scenarios.split(",") if s]
+    rows, speedups, di_speedups, results = bench_all(
+        scenarios, max_rounds=args.max_rounds
+    )
+    for row in rows:
+        print(row)
+    if args.json:
+        write_json(args.json, speedups, di_speedups, results)
+        print(f"# wrote {args.json}", file=sys.stderr)
+    worst = min(speedups.values())
+    if worst < args.min_speedup:
+        print(f"FAIL: virtual speedup {worst:.2f}x < {args.min_speedup:.2f}x")
+        return 1
+    return 0
 
 
 if __name__ == "__main__":
@@ -296,14 +370,4 @@ if __name__ == "__main__":
         help="exit non-zero unless every scenario's virtual speedup >= this",
     )
     args = ap.parse_args()
-    scenarios = [s for s in args.scenarios.split(",") if s]
-    rows, speedups, results = bench_all(scenarios, max_rounds=args.max_rounds)
-    for row in rows:
-        print(row)
-    if args.json:
-        write_json(args.json, speedups, results)
-        print(f"# wrote {args.json}", file=sys.stderr)
-    worst = min(speedups.values())
-    if worst < args.min_speedup:
-        print(f"FAIL: virtual speedup {worst:.2f}x < {args.min_speedup:.2f}x")
-        sys.exit(1)
+    sys.exit(_main(args))

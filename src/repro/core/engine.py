@@ -122,8 +122,10 @@ def gal_weighted_merge(global_lora, gal_mask, stacked_client_lora, weights):
     agg = jax.tree.map(
         lambda x: jnp.tensordot(weights, x, axes=1), stacked_client_lora
     )
+    # the float mask/weight arithmetic must not silently widen bf16 leaves
     return jax.tree.map(
-        lambda g, m, a: m * a + (1.0 - m) * g, global_lora, gal_mask, agg
+        lambda g, m, a: (m * a + (1.0 - m) * g).astype(g.dtype),
+        global_lora, gal_mask, agg,
     )
 
 
@@ -168,7 +170,7 @@ def gal_delta_merge(global_lora, gal_mask, stacked_deltas, weights):
         lambda x: jnp.tensordot(weights, x, axes=1), stacked_deltas
     )
     return jax.tree.map(
-        lambda g, m, d: g + m * d, global_lora, gal_mask, agg
+        lambda g, m, d: (g + m * d).astype(g.dtype), global_lora, gal_mask, agg
     )
 
 
@@ -186,6 +188,7 @@ def _round_body(
     use_neuron_mask: bool,
     shard: Callable = lambda t: t,
     hoist_client_data: bool = False,
+    compress: Any = None,
 ) -> Callable:
     """The round program shared by the single-device and sharded engines.
 
@@ -194,6 +197,17 @@ def _round_body(
     the chosen clients' data grid once before the step scan (so the sharded
     engine pays one collective gather per round, not one per step) — the
     per-step batch values are identical either way.
+
+    ``compress`` (a dict of ``qmax``/``topk_ratio``/``use_thresh``/
+    ``error_feedback``/``has_comp_mask`` — trace-time constants) switches the
+    server aggregation to the compressed-upload path: each chosen client's
+    GAL delta (plus its carried error-feedback residual) goes through the
+    fake-quantize/top-k round trip (:func:`repro.kernels.ops.fake_compress`)
+    and the server applies the *reconstructions* delta-style — algebraically
+    equal to the value merge when compression is lossless, since the
+    normalized weights sum to one. The round program then takes two extra
+    trailing arguments (the stacked residual state and an optional per-client
+    top-k count mask) and returns the updated residuals as a fifth output.
     """
 
     def round_fn(
@@ -210,6 +224,8 @@ def _round_body(
         step_valid,
         weights,
         lr,
+        stacked_residual=None,
+        comp_mask=None,
     ):
         cl_lora = shard(_gather(stacked_lora, chosen))
         cl_opt = shard(_gather(stacked_opt, chosen))
@@ -219,9 +235,11 @@ def _round_body(
             cl_sv = shard(sample_valid[chosen])
 
         # line 15: overwrite the GAL part of each client's LoRA with the
-        # global copy; gal_mask leaves broadcast over the client axis.
+        # global copy; gal_mask leaves broadcast over the client axis. The
+        # float blend must not silently widen bf16 leaves.
         cl_lora = jax.tree.map(
-            lambda g, l, m: m * g + (1.0 - m) * l, global_lora, cl_lora, gal_mask
+            lambda g, l, m: (m * g + (1.0 - m) * l).astype(l.dtype),
+            global_lora, cl_lora, gal_mask,
         )
 
         client_step = make_client_step(loss_fn, opt_update)
@@ -259,15 +277,53 @@ def _round_body(
             step, (cl_lora, cl_opt), (batch_idx.T, step_valid.T)
         )
 
-        # line 18: weighted FedAvg fused over the GAL part only; with the k
-        # axis sharded this contraction IS the server all-reduce (psum)
-        new_global = gal_weighted_merge(global_lora, gal_mask, cl_lora, weights)
+        if compress is None:
+            # line 18: weighted FedAvg fused over the GAL part only; with the
+            # k axis sharded this contraction IS the server all-reduce (psum)
+            new_global = gal_weighted_merge(global_lora, gal_mask, cl_lora, weights)
+
+            return (
+                new_global,
+                _scatter(stacked_lora, chosen, cl_lora),
+                _scatter(stacked_opt, chosen, cl_opt),
+                losses,
+            )
+
+        # compressed upload: each client ships the dequantized reconstruction
+        # of its GAL delta (+ carried residual); the server applies the
+        # reconstructions with the same normalized weights (sum 1), which
+        # equals the value merge exactly when compression is lossless
+        from repro.kernels import ops as _kops
+
+        ef = compress["error_feedback"]
+        delta = jax.tree.map(
+            lambda l, g, m: (l - g) * m, cl_lora, global_lora, gal_mask
+        )
+        cl_res = shard(_gather(stacked_residual, chosen)) if ef else None
+        cl_cm = (
+            shard(_gather(comp_mask, chosen)) if compress["has_comp_mask"] else None
+        )
+
+        def one(d, r, cm):
+            return _kops.fake_compress(
+                d, r, gal_mask if cm is None else cm,
+                qmax=compress["qmax"],
+                topk_ratio=compress["topk_ratio"],
+                use_thresh=compress["use_thresh"],
+            )
+
+        y, new_res = jax.vmap(
+            one,
+            in_axes=(0, 0 if ef else None, 0 if cl_cm is not None else None),
+        )(delta, cl_res, cl_cm)
+        new_global = gal_delta_merge(global_lora, gal_mask, y, weights)
 
         return (
             new_global,
             _scatter(stacked_lora, chosen, cl_lora),
             _scatter(stacked_opt, chosen, cl_opt),
             losses,
+            _scatter(stacked_residual, chosen, new_res) if ef else stacked_residual,
         )
 
     return round_fn
@@ -290,6 +346,21 @@ def build_round_fn(
     """
     body = _round_body(loss_fn, opt_update, use_neuron_mask=use_neuron_mask)
     return jax.jit(body, donate_argnums=(1, 2, 3))
+
+
+def build_compressed_round_fn(
+    loss_fn: Callable, opt_update: Callable, *, use_neuron_mask: bool, compress
+) -> Callable:
+    """The round program of :func:`build_round_fn` with the compressed-upload
+    aggregation (see :func:`_round_body`): two extra trailing arguments
+    ``(stacked_residual, comp_mask)`` — pass ``jnp.zeros(())`` placeholders
+    when ``error_feedback``/``has_comp_mask`` are off — and a fifth output,
+    the updated stacked error-feedback residuals. The residual state is
+    donated like the other stacked client state."""
+    body = _round_body(
+        loss_fn, opt_update, use_neuron_mask=use_neuron_mask, compress=compress
+    )
+    return jax.jit(body, donate_argnums=(1, 2, 3, 13))
 
 
 def build_sharded_round_fn(
@@ -334,6 +405,48 @@ def build_sharded_round_fn(
     )
 
 
+def build_sharded_compressed_round_fn(
+    loss_fn: Callable, opt_update: Callable, *, use_neuron_mask: bool,
+    compress, mesh
+) -> Callable:
+    """:func:`build_compressed_round_fn` sharded over ``mesh`` — the stacked
+    residual state and the optional per-client top-k count mask ride the
+    client axis (scalar placeholders, when their knob is off, replicate)."""
+    client = client_sharding(mesh)
+    repl = replicated_sharding(mesh)
+    body = _round_body(
+        loss_fn,
+        opt_update,
+        use_neuron_mask=use_neuron_mask,
+        shard=lambda t: jax.lax.with_sharding_constraint(t, client),
+        hoist_client_data=True,
+        compress=compress,
+    )
+    res_shd = client if compress["error_feedback"] else repl
+    return jax.jit(
+        body,
+        in_shardings=(
+            repl,  # params
+            repl,  # global_lora
+            client,  # stacked_lora
+            client,  # stacked_opt
+            client if use_neuron_mask else repl,  # neuron_mask
+            repl,  # gal_mask
+            client,  # data
+            client,  # sample_valid
+            repl,  # chosen
+            repl,  # batch_idx
+            repl,  # step_valid
+            repl,  # weights
+            repl,  # lr
+            res_shd,  # stacked_residual
+            client if compress["has_comp_mask"] else repl,  # comp_mask
+        ),
+        out_shardings=(repl, client, client, repl, res_shd),
+        donate_argnums=(1, 2, 3, 13),
+    )
+
+
 def _client_train_body(
     loss_fn: Callable, opt_update: Callable, *, use_neuron_mask: bool
 ) -> Callable:
@@ -360,8 +473,10 @@ def _client_train_body(
         lr,
     ):
         # line 15: overwrite the GAL part with the pulled global version
+        # (dtype-preserving: the float blend must not widen bf16 leaves)
         lora = jax.tree.map(
-            lambda g, l, m: m * g + (1.0 - m) * l, global_lora, lora, gal_mask
+            lambda g, l, m: (m * g + (1.0 - m) * l).astype(l.dtype),
+            global_lora, lora, gal_mask,
         )
         mask = neuron_mask if use_neuron_mask else None
 

@@ -67,7 +67,8 @@ from repro.core import gal as galmod
 from repro.core import sparse as sparsemod
 from repro.core.curriculum import CurriculumSchedule
 from repro.data.pipeline import gather_batch, make_batches, stack_clients
-from repro.lora import gal_mask_tree, neuron_mask_tree
+from repro.kernels import ops as kops
+from repro.lora import gal_mask_tree, neuron_mask_tree, rank_mask_tree
 from repro.models.model_api import ModelFns
 from repro.optim import make_optimizer
 from repro.train.losses import make_logits_loss
@@ -119,6 +120,9 @@ class ClientState:
     difficulty: Optional[np.ndarray] = None
     layer_scores: Optional[np.ndarray] = None
     lossless_fraction: float = 1.0
+    # compression error-feedback residual (loop/async engines; the stacked
+    # engines keep one stacked residual tree on the runner instead)
+    ef_residual: Any = None
     # Either a concrete LoRA tree (loop engine) or a zero-cost view into the
     # vectorized engine's stacked tree, materialized only on access so the
     # round hot path never pays for per-client host bookkeeping.
@@ -154,6 +158,8 @@ class FibecFed:
         mesh: Optional[Any] = None,
         scenario: Optional[Any] = None,
         async_cfg: Optional[Any] = None,
+        compression: Optional[Any] = None,
+        client_ranks: Optional[Sequence[int]] = None,
         seed: int = 0,
     ):
         """Build an FL runner over host-simulated clients.
@@ -190,6 +196,20 @@ class FibecFed:
             (``merge_mode``/``server_lr``, ``staleness_cutoff``,
             ``adapt_buffer``, ``adapt_steps``, ``sampling_bias``); only
             meaningful with ``engine="async"``.
+          compression: ``repro.federated.CompressionConfig`` — fake-quantize
+            the client→server GAL delta (int8/int4/top-k, with per-client
+            error-feedback residuals) and charge the compressed payload in
+            comm accounting. ``None`` / ``mode="none"`` is an exact no-op:
+            every engine takes the untouched PR 5 code paths. May also be
+            set via ``async_cfg.compression`` (they must agree if both set).
+          client_ranks: per-client effective LoRA rank (resource-adaptive):
+            client ``i`` trains only the first ``client_ranks[i]`` rank
+            components — the rest stay frozen at the pulled values, so its
+            delta is exactly zero there and rank-heterogeneous aggregation
+            is plain masked FedAvg into the full server rank. Pull/push
+            bytes are rank-projected. Defaults to full rank everywhere;
+            under ``engine="async"`` a scenario with
+            ``slow_rank_fraction < 1`` derives ranks for the slow group.
           seed: seeds client sampling, GAL randomness, and params/LoRA init;
             the async scenario stream derives from it at a fixed offset so
             heterogeneity never perturbs cohort-sampling equivalence.
@@ -255,6 +275,49 @@ class FibecFed:
             self.async_cfg = async_cfg if async_cfg is not None else AsyncAggConfig()
             self._global = DoubleBufferedGlobal(self.global_lora)
             self._scheduler = None  # built lazily on the first async round
+
+        # --- compressed uploads + resource-adaptive per-client rank ---
+        # lazy import: repro.federated's package init imports this module
+        from repro.federated.compress import CompressionConfig
+
+        if self._async and self.async_cfg.compression is not None:
+            if compression is not None and compression != self.async_cfg.compression:
+                raise ValueError(
+                    "compression= conflicts with async_cfg.compression; set one"
+                )
+            compression = self.async_cfg.compression
+        if compression is not None and not isinstance(compression, CompressionConfig):
+            raise TypeError(
+                f"compression must be a CompressionConfig, got {type(compression)!r}"
+            )
+        # mode="none" normalizes to None so defaults take the PR 5 code paths
+        self.compression = (
+            compression if compression is not None and compression.enabled else None
+        )
+
+        if client_ranks is None and self._async and self.scenario.slow_rank_fraction < 1.0:
+            from repro.federated.hetero import SCENARIO_SEED_OFFSET
+
+            bound = self.scenario.bind(
+                len(client_data), seed=seed + SCENARIO_SEED_OFFSET
+            )
+            client_ranks = bound.client_ranks(self.cfg.lora_rank)
+        if client_ranks is not None:
+            ranks = np.asarray(client_ranks, np.int64)
+            if ranks.shape != (len(client_data),):
+                raise ValueError("client_ranks needs exactly one rank per client")
+            if np.any(ranks < 1) or np.any(ranks > self.cfg.lora_rank):
+                raise ValueError(
+                    f"client_ranks must lie in [1, {self.cfg.lora_rank}]"
+                )
+            if np.all(ranks == self.cfg.lora_rank):
+                ranks = None  # exact no-op: take the untouched code paths
+            self.client_ranks = ranks
+        else:
+            self.client_ranks = None
+        self._rank_mask_cache: Dict[int, Any] = {}
+        self._comp_mask_cache: Dict[int, Any] = {}
+
         self.clients: List[ClientState] = []
         for cd in client_data:
             n = len(next(iter(cd.values())))
@@ -306,6 +369,10 @@ class FibecFed:
                 lambda x: jnp.repeat(jnp.asarray(x)[None], C_stack, axis=0), opt0
             )
             self._stacked_mask = None  # built in init_phase when sparse_update
+            # compression state (built in init_phase when enabled): stacked
+            # per-client error-feedback residuals + top-k count masks
+            self._stacked_residual = None
+            self._stacked_comp_mask = None
             if self.mesh is not None:
                 client_shd = eng.client_sharding(self.mesh)
                 repl_shd = eng.replicated_sharding(self.mesh)
@@ -322,10 +389,14 @@ class FibecFed:
 
         self.gal_layers: Optional[np.ndarray] = None  # bool (L_logical,)
         self._gal_mask_tree = None
-        self._gal_bytes_cache: Optional[int] = None
+        self._gal_leaf_cache: Optional[List[tuple]] = None
+        self._comm_bytes_cache: Dict[Optional[int], tuple] = {}
 
-        # bytes accounting (paper §5.6): LoRA params up+down per round
+        # bytes accounting (paper §5.6): LoRA params up+down per round, wire
+        # dtype per leaf; the upload-only series isolates the compressed
+        # push (the pull is always raw, so total ratios saturate near 2x)
         self.comm_bytes_per_round: List[int] = []
+        self.comm_upload_bytes_per_round: List[int] = []
         # sync engines record (chosen, client_steps) per round so benchmarks
         # can price the round barrier under a hetero.ScenarioPreset
         self.last_round_info: Optional[Dict[str, np.ndarray]] = None
@@ -422,9 +493,42 @@ class FibecFed:
             lambda: eng.build_fim_warmup_fn(loss_fn, momentum),
         )
 
+    def _compress_static(self) -> Optional[Dict[str, Any]]:
+        """Static compression spec baked into the round program (trace-time
+        constants: quantizer width, top-k fraction, which optional inputs
+        exist). ``None`` when compression is off — the untouched builders
+        produce bit-identical programs to the uncompressed stack."""
+        if self.compression is None:
+            return None
+        c = self.compression
+        return {
+            "qmax": c.qmax,
+            "topk_ratio": c.topk_ratio,
+            "use_thresh": c.use_thresh,
+            "error_feedback": c.error_feedback,
+            "has_comp_mask": bool(c.use_thresh and self.client_ranks is not None),
+        }
+
     def _round_fn(self):
         loss_fn, opt_update, mesh = self.loss_fn, self.opt_update, self.mesh
         use_mask = self._stacked_mask is not None
+        comp = self._compress_static()
+        if comp is not None:
+            ckey = tuple(sorted(comp.items()))
+            if mesh is not None:
+                return _memo(
+                    ("round_c", loss_fn, self._opt_key, use_mask, ckey, mesh),
+                    lambda: eng.build_sharded_compressed_round_fn(
+                        loss_fn, opt_update, use_neuron_mask=use_mask,
+                        compress=comp, mesh=mesh,
+                    ),
+                )
+            return _memo(
+                ("round_c", loss_fn, self._opt_key, use_mask, ckey),
+                lambda: eng.build_compressed_round_fn(
+                    loss_fn, opt_update, use_neuron_mask=use_mask, compress=comp
+                ),
+            )
         if mesh is not None:
             return _memo(
                 ("round", loss_fn, self._opt_key, use_mask, mesh),
@@ -444,7 +548,9 @@ class FibecFed:
         client's curriculum steps with no vmap barrier. Memoized like every
         other program so ``clear_compile_caches`` covers it."""
         loss_fn, opt_update = self.loss_fn, self.opt_update
-        use_mask = self.sparse_update and self.clients[0].neuron_mask is not None
+        # presence-based: rank keep-masks fold into neuron_mask even with
+        # sparse_update off, and they must gate local updates identically
+        use_mask = self.clients[0].neuron_mask is not None
         return _memo(
             ("client_train", loss_fn, self._opt_key, use_mask),
             lambda: eng.build_client_train_fn(
@@ -590,6 +696,90 @@ class FibecFed:
             keep = sparsemod.select_neuron_masks(importance, rho)
             client.neuron_mask = neuron_mask_tree(self.cfg, client.lora, keep)
 
+    def _rank_mask(self, rank: int) -> Any:
+        if rank not in self._rank_mask_cache:
+            self._rank_mask_cache[rank] = rank_mask_tree(self._init_lora, rank)
+        return self._rank_mask_cache[rank]
+
+    def _comp_mask(self, ci: int) -> Any:
+        """Top-k count mask for client ``ci``: GAL support × rank keep-mask
+        (the fraction is taken of the values the client can actually send).
+        Cached per distinct rank — the trees are rank-, not client-, shaped.
+        """
+        rank = int(self.client_ranks[ci])
+        if rank not in self._comp_mask_cache:
+            self._comp_mask_cache[rank] = jax.tree.map(
+                lambda m, r: m * r, self._gal_mask_tree, self._rank_mask(rank)
+            )
+        return self._comp_mask_cache[rank]
+
+    def _fold_rank_masks(self) -> None:
+        """Fold per-client rank keep-masks into the update masks.
+
+        A rank-``r_i`` client's beyond-rank LoRA components stay frozen at
+        the pulled values, so its delta there is exactly zero and the
+        existing masked FedAvg aggregates rank-heterogeneous updates into
+        the full server rank with no pad/project pass. Idempotent (binary
+        masks), so repeated ``init_phase`` calls are safe.
+        """
+        per_client = [self._rank_mask(int(r)) for r in self.client_ranks]
+        if self._stacked_engine:
+            C_stack = self._sample_valid.shape[0]
+            padded = per_client + [per_client[0]] * (C_stack - len(per_client))
+            stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *padded)
+            self._stacked_mask = (
+                stacked
+                if self._stacked_mask is None
+                else jax.tree.map(jnp.multiply, self._stacked_mask, stacked)
+            )
+            if self.mesh is not None:
+                self._stacked_mask = jax.device_put(
+                    self._stacked_mask, eng.client_sharding(self.mesh)
+                )
+            for ci, client in enumerate(self.clients):
+                client.neuron_mask = jax.tree.map(
+                    lambda x: x[ci], self._stacked_mask
+                )
+            return
+        for ci, client in enumerate(self.clients):
+            rm = per_client[ci]
+            client.neuron_mask = (
+                rm
+                if client.neuron_mask is None
+                else jax.tree.map(jnp.multiply, client.neuron_mask, rm)
+            )
+
+    def _reset_compression_state(self) -> None:
+        """Zero the error-feedback residuals and (re)build the stacked
+        top-k count masks. Called from ``init_phase``: the GAL support the
+        residuals live on may have changed."""
+        if self.compression is None:
+            return
+        if self._stacked_engine:
+            if self.compression.error_feedback:
+                self._stacked_residual = jax.tree.map(
+                    jnp.zeros_like, self._stacked_lora
+                )
+                if self.mesh is not None:
+                    self._stacked_residual = jax.device_put(
+                        self._stacked_residual, eng.client_sharding(self.mesh)
+                    )
+            if self.compression.use_thresh and self.client_ranks is not None:
+                C_stack = self._sample_valid.shape[0]
+                per = [self._comp_mask(ci) for ci in range(len(self.clients))]
+                per += [per[0]] * (C_stack - len(per))
+                self._stacked_comp_mask = jax.tree.map(
+                    lambda *xs: jnp.stack(xs), *per
+                )
+                if self.mesh is not None:
+                    self._stacked_comp_mask = jax.device_put(
+                        self._stacked_comp_mask, eng.client_sharding(self.mesh)
+                    )
+            return
+        if self.compression.error_feedback:
+            for client in self.clients:
+                client.ef_residual = jax.tree.map(jnp.zeros_like, self._init_lora)
+
     def init_phase(self, *, probe_batches: int = 1) -> None:
         fl = self.fl
 
@@ -631,11 +821,21 @@ class FibecFed:
             self._gal_mask_tree = jax.device_put(
                 self._gal_mask_tree, eng.replicated_sharding(self.mesh)
             )
-        self._gal_bytes_cache = None
+        self._gal_leaf_cache = None
+        self._comm_bytes_cache = {}
+        self._comp_mask_cache = {}
 
         # --- local update parameter selection (lines 8-10) ---
         if self.sparse_update:
             self._select_local_masks()
+
+        # --- resource-adaptive rank: fold keep-masks into update masks ---
+        if self.client_ranks is not None:
+            self._fold_rank_masks()
+
+        # --- compression state: EF residuals are support-dependent on the
+        # GAL mask, so a re-init resets them; top-k count masks likewise ---
+        self._reset_compression_state()
 
     def _select_layers(self, global_scores: np.ndarray, n_star: int) -> np.ndarray:
         L = len(global_scores)
@@ -663,29 +863,101 @@ class FibecFed:
         """Line 15: overwrite the GAL part of the client's LoRA."""
         m = self._gal_mask_tree
         client.lora = jax.tree.map(
-            lambda g, l, mm: mm * g + (1.0 - mm) * l, self.global_lora, client.lora, m
+            # float mask arithmetic must not silently widen bf16 LoRA leaves
+            lambda g, l, mm: (mm * g + (1.0 - mm) * l).astype(l.dtype),
+            self.global_lora, client.lora, m,
         )
 
-    def _gal_bytes_per_client(self) -> int:
-        """comm accounting for ONE completion event: GAL LoRA down (pull) +
-        up (push). The async engine attributes bytes per completion — a
-        dropped client that never reports back contributes nothing.
+    def _gal_leaf_values(self) -> List[tuple]:
+        """Per GAL-mask leaf: (unmasked value count, wire itemsize from the
+        LoRA leaf's *actual* dtype). GAL mask leaves are broadcastable —
+        one entry per layer slice, not per value — so each nonzero entry
+        covers ``leaf.size // mask.size`` values.
 
         The mask is fixed after init_phase; sum it once, not every round
         (each ``float()`` is a device sync on the round's critical path).
         """
-        if self._gal_bytes_cache is None:
-            self._gal_bytes_cache = int(
-                sum(
-                    float(jnp.sum(mm)) * 4  # f32
-                    for mm in jax.tree.leaves(self._gal_mask_tree)
+        if self._gal_leaf_cache is None:
+            masks = jax.tree.leaves(self._gal_mask_tree)
+            loras = jax.tree.leaves(self.global_lora)
+            self._gal_leaf_cache = [
+                (
+                    int(float(jnp.sum(mm))) * (leaf.size // mm.size),
+                    jnp.asarray(leaf).dtype.itemsize,
                 )
-            )
-        return 2 * self._gal_bytes_cache
+                for mm, leaf in zip(masks, loras)
+            ]
+        return self._gal_leaf_cache
 
-    def _gal_bytes(self, k: int) -> int:
-        """Synchronous-round comm: k cohort members, one round trip each."""
-        return k * self._gal_bytes_per_client()
+    def _client_comm_bytes(self, ci: Optional[int]) -> tuple:
+        """(down, up) wire bytes of ONE completion event for client ``ci``
+        (``None`` = a full-rank client): the pull ships the client's
+        rank-projection of the unmasked GAL values raw; the push ships the
+        compressed payload (values + scales + top-k indices) under
+        ``self.compression``. Cached per distinct rank.
+        """
+        from repro.federated.compress import leaf_upload_bytes
+
+        rank = (
+            None
+            if ci is None or self.client_ranks is None
+            else int(self.client_ranks[ci])
+        )
+        if rank not in self._comm_bytes_cache:
+            R = self.cfg.lora_rank
+            down = up = 0
+            for n, itemsize in self._gal_leaf_values():
+                # every GAL leaf's value count is divisible by the rank (the
+                # rank axis is a full dimension of both a and b), so the
+                # rank projection is exact integer arithmetic
+                n_r = n if rank is None else (n * rank) // R
+                down += n_r * itemsize
+                up += leaf_upload_bytes(n_r, itemsize, self.compression)
+            self._comm_bytes_cache[rank] = (down, up)
+        return self._comm_bytes_cache[rank]
+
+    def _gal_bytes_per_client(self) -> int:
+        """comm accounting for ONE full-rank completion event: GAL LoRA
+        down (pull) + up (push). The async engine attributes bytes per
+        completion — a dropped client that never reports back contributes
+        nothing."""
+        down, up = self._client_comm_bytes(None)
+        return down + up
+
+    def _gal_bytes(self, chosen) -> tuple:
+        """Synchronous-round comm (total, upload-only) over the cohort."""
+        pairs = [self._client_comm_bytes(int(ci)) for ci in chosen]
+        return sum(d + u for d, u in pairs), sum(u for _, u in pairs)
+
+    def _compress_client(self, ci: int, client: ClientState, pulled: Any):
+        """Simulate the compressed upload channel for one client (loop and
+        async engines): fake-quantize the masked GAL delta (adding the
+        carried error-feedback residual first), store the new residual, and
+        return the dequantized delta the server receives. The quantizer
+        maps 0 → 0, so the result stays supported on the GAL mask.
+        """
+        comp = self.compression
+        delta = jax.tree.map(
+            lambda nl, g, mm: (nl - g) * mm,
+            client.lora, pulled, self._gal_mask_tree,
+        )
+        res = client.ef_residual if comp.error_feedback else None
+        cm = None
+        if comp.use_thresh:
+            cm = (
+                self._comp_mask(ci)
+                if self.client_ranks is not None
+                else self._gal_mask_tree
+            )
+        y, new_res = kops.fake_compress(
+            delta, res, cm,
+            qmax=comp.qmax,
+            topk_ratio=comp.topk_ratio,
+            use_thresh=comp.use_thresh,
+        )
+        if comp.error_feedback:
+            client.ef_residual = new_res
+        return y
 
     def run_round(self, t: int, lr: Optional[float] = None) -> Dict[str, float]:
         if self._async:
@@ -702,6 +974,10 @@ class FibecFed:
         losses = []
         updates, weights, sel_counts = [], [], []
         step = self._grad_step()
+        # the pulled global this cohort trains against: needed live for
+        # delta extraction under compression (self.global_lora is only
+        # reassigned after the host-side FedAvg below, so this is an alias)
+        g0 = self.global_lora
         for ci in chosen:
             client = self.clients[ci]
             self._merge_global(client)
@@ -716,7 +992,15 @@ class FibecFed:
                         client.neuron_mask,
                     )
                     losses.append(float(loss))
-            updates.append(client.lora)
+            if self.compression is not None:
+                y = self._compress_client(int(ci), client, g0)
+                # value-form payload: the server's weighted GAL average of
+                # (g0 + y_i) equals the delta merge g0 + Σ w_i y_i exactly
+                updates.append(
+                    jax.tree.map(lambda g, yy: (g + yy).astype(g.dtype), g0, y)
+                )
+            else:
+                updates.append(client.lora)
             weights.append(client.n)
         # for scenario replay (benchmarks price the sync barrier): who ran,
         # and how many real local steps each took
@@ -732,11 +1016,13 @@ class FibecFed:
 
         def agg(g_old, mask, *client_loras):
             acc = sum(wi * cl for wi, cl in zip(w, client_loras))
-            return mask * acc + (1.0 - mask) * g_old
+            return (mask * acc + (1.0 - mask) * g_old).astype(g_old.dtype)
 
         self.global_lora = jax.tree.map(agg, self.global_lora, m, *updates)
 
-        self.comm_bytes_per_round.append(self._gal_bytes(k))
+        total, up = self._gal_bytes(chosen)
+        self.comm_bytes_per_round.append(total)
+        self.comm_upload_bytes_per_round.append(up)
         return {
             "loss": float(np.mean(losses)) if losses else float("nan"),
             # cohort mean: a per-client count would track whichever client
@@ -774,7 +1060,7 @@ class FibecFed:
         mask_arg = (
             self._stacked_mask if self._stacked_mask is not None else jnp.zeros(())
         )
-        self.global_lora, self._stacked_lora, self._stacked_opt, losses = round_fn(
+        args = (
             self.params,
             self.global_lora,
             self._stacked_lora,
@@ -789,6 +1075,30 @@ class FibecFed:
             jnp.asarray(w),
             jnp.float32(lr),
         )
+        if self.compression is None:
+            self.global_lora, self._stacked_lora, self._stacked_opt, losses = (
+                round_fn(*args)
+            )
+        else:
+            res_arg = (
+                self._stacked_residual
+                if self.compression.error_feedback
+                else jnp.zeros(())
+            )
+            cm_arg = (
+                self._stacked_comp_mask
+                if self._stacked_comp_mask is not None
+                else jnp.zeros(())
+            )
+            (
+                self.global_lora,
+                self._stacked_lora,
+                self._stacked_opt,
+                losses,
+                new_res,
+            ) = round_fn(*args, res_arg, cm_arg)
+            if self.compression.error_feedback:
+                self._stacked_residual = new_res
 
         losses = np.asarray(losses)  # (S, k)
         valid = step_valid.T
@@ -798,7 +1108,9 @@ class FibecFed:
             "chosen": np.asarray(chosen[:k]),
             "client_steps": step_valid[:k].sum(axis=1).astype(np.int64),
         }
-        self.comm_bytes_per_round.append(self._gal_bytes(k))
+        total, up = self._gal_bytes(chosen[:k])
+        self.comm_bytes_per_round.append(total)
+        self.comm_upload_bytes_per_round.append(up)
         return {
             "loss": mean_loss,
             "selected_batches": float(
@@ -855,8 +1167,9 @@ class FibecFed:
 
         fl, cfg = self.fl, self.async_cfg
         train_fn = self._client_train_fn()
-        use_mask = self.sparse_update and self.clients[0].neuron_mask is not None
+        use_mask = self.clients[0].neuron_mask is not None
         delta_mode = cfg.merge_mode == "delta"
+        comp = self.compression
 
         def _cap(ci: int, n_sel: int) -> Optional[int]:
             if not cfg.adapt_steps:
@@ -898,11 +1211,26 @@ class FibecFed:
             # delta against the pulled version, extracted now — by merge
             # time this version may already be retired from the double
             # buffer (staleness >= 2), so it cannot be recovered later
-            delta = self._delta_fn()(new_lora, pulled) if delta_mode else None
+            if comp is None:
+                delta = self._delta_fn()(new_lora, pulled) if delta_mode else None
+                lora_payload = new_lora
+            else:
+                # the channel carries the compressed GAL delta either way;
+                # buffered mode reconstructs pulled + dequantized server-side
+                y = self._compress_client(ci, client, pulled)
+                delta = y if delta_mode else None
+                lora_payload = (
+                    new_lora
+                    if delta_mode
+                    else jax.tree.map(
+                        lambda g, yy: (g + yy).astype(g.dtype), pulled, y
+                    )
+                )
+            down, up = self._client_comm_bytes(ci)
             n_steps = int(step_valid.sum())
             return ClientUpdate(
                 client=ci,
-                lora=new_lora,
+                lora=lora_payload,
                 delta=delta,
                 losses=losses,
                 step_valid=step_valid[0],
@@ -911,6 +1239,8 @@ class FibecFed:
                 n_selected=n_steps // fl.local_epochs,
                 pulled_version=version,
                 round_t=t,
+                comm_bytes=down + up,
+                upload_bytes=up,
             )
 
         return plan, train
@@ -956,10 +1286,15 @@ class FibecFed:
             den += float(np.sum(valid))
 
         # completions pay the round trip whether or not the staleness cutoff
-        # later discards them — the bytes were already on the wire
+        # later discards them — the bytes were already on the wire (the
+        # cutoff's casualties never reach us, so the scheduler accumulates
+        # their payload bytes and reports them on the MergeResult)
         self.comm_bytes_per_round.append(
-            (result.completed + result.stale_dropped)
-            * self._gal_bytes_per_client()
+            sum(u.comm_bytes for u in result.updates) + result.stale_dropped_bytes
+        )
+        self.comm_upload_bytes_per_round.append(
+            sum(u.upload_bytes for u in result.updates)
+            + result.stale_dropped_upload_bytes
         )
         return {
             "loss": num / max(den, 1.0),

@@ -11,6 +11,11 @@ from repro.federated.async_agg import (
     staleness_weights,
 )
 from repro.federated.baselines import BASELINES, make_runner, run_experiment
+from repro.federated.compress import (
+    CompressionConfig,
+    leaf_upload_bytes,
+    topk_k,
+)
 from repro.federated.hetero import (
     SCENARIOS,
     BoundScenario,

@@ -86,6 +86,7 @@ from typing import Any, Callable, Generic, List, Optional, Sequence, Set, TypeVa
 
 import numpy as np
 
+from repro.federated.compress import CompressionConfig
 from repro.federated.hetero import BoundScenario
 
 T = TypeVar("T")
@@ -140,6 +141,11 @@ class AsyncAggConfig:
     weights dispatch toward fast clients early in the curriculum ramp,
     relaxing to uniform as the ramp completes (see :func:`cohort_weights`).
     0 preserves the synchronous engines' exact RNG consumption.
+    ``compression`` — a :class:`repro.federated.compress.CompressionConfig`
+    applied to each client's GAL upload at completion time (the server
+    merges the dequantized reconstruction; comm accounting charges the
+    compressed payload). ``None`` (or ``mode="none"``) ships raw values —
+    the exact no-op.
     """
 
     buffer_size: Optional[int] = None
@@ -154,8 +160,13 @@ class AsyncAggConfig:
     adapt_steps: bool = False
     min_steps: int = 1
     sampling_bias: float = 0.0
+    compression: Optional[CompressionConfig] = None
 
     def __post_init__(self):
+        if self.compression is not None and not isinstance(
+            self.compression, CompressionConfig
+        ):
+            raise TypeError("compression must be a CompressionConfig (or None)")
         if self.buffer_size is not None and self.buffer_size < 1:
             raise ValueError("buffer_size must be >= 1")
         if self.concurrency is not None and self.concurrency < 1:
@@ -334,6 +345,10 @@ class ClientUpdate:
     n_selected: int  # curriculum-selected batches at dispatch round
     pulled_version: int
     round_t: int  # server round at dispatch time
+    # wire bytes of this completion under the runner's compression/rank
+    # config: the full round trip (down + up) and the upload alone
+    comm_bytes: int = 0
+    upload_bytes: int = 0
 
 
 @dataclasses.dataclass
@@ -374,6 +389,10 @@ class MergeResult:
     completed: int  # completions consumed by this flush
     dropped: int  # drops observed since the previous flush
     stale_dropped: int = 0  # completions discarded by the staleness cutoff
+    # wire bytes of the stale-discarded completions (already on the wire
+    # when the cutoff discarded them, so the runner still charges them)
+    stale_dropped_bytes: int = 0
+    stale_dropped_upload_bytes: int = 0
 
 
 class AsyncScheduler:
@@ -445,6 +464,8 @@ class AsyncScheduler:
         self.total_stale_dropped = 0
         self._dropped_since_flush = 0
         self._stale_since_flush = 0
+        self._stale_bytes_since_flush = 0
+        self._stale_upload_bytes_since_flush = 0
         self._rate_ema: Optional[float] = None
         self._heap: List[_Event] = []
         self._seq = itertools.count()
@@ -540,6 +561,16 @@ class AsyncScheduler:
             n_stale = len(updates) - len(fresh)
             self.total_stale_dropped += n_stale
             self._stale_since_flush += n_stale
+            fresh_set = {id(u) for u in fresh}
+            for u in updates:
+                if id(u) not in fresh_set:
+                    # accumulate here — these payloads are discarded before
+                    # the runner ever sees them (getattr: the scheduler
+                    # tests use stub payloads without byte fields)
+                    self._stale_bytes_since_flush += getattr(u, "comm_bytes", 0)
+                    self._stale_upload_bytes_since_flush += getattr(
+                        u, "upload_bytes", 0
+                    )
             updates = fresh
             if not updates:
                 return None
@@ -559,6 +590,12 @@ class AsyncScheduler:
         self.last_merge_weights = weights
         dropped, self._dropped_since_flush = self._dropped_since_flush, 0
         stale_dropped, self._stale_since_flush = self._stale_since_flush, 0
+        stale_bytes, self._stale_bytes_since_flush = (
+            self._stale_bytes_since_flush, 0
+        )
+        stale_up, self._stale_upload_bytes_since_flush = (
+            self._stale_upload_bytes_since_flush, 0
+        )
         result = MergeResult(
             updates=updates,
             weights=weights,
@@ -568,6 +605,8 @@ class AsyncScheduler:
             completed=len(updates),
             dropped=dropped,
             stale_dropped=stale_dropped,
+            stale_dropped_bytes=stale_bytes,
+            stale_dropped_upload_bytes=stale_up,
         )
         if self.adapt_buffer:
             self._adapt_buffer_size(result)

@@ -55,6 +55,8 @@ def make_runner(
     mesh: Any = None,
     scenario: Any = None,
     async_cfg: Any = None,
+    compression: Any = None,
+    client_ranks: Any = None,
 ) -> FibecFed:
     """Build a :class:`FibecFed` runner from a named baseline preset.
 
@@ -79,6 +81,11 @@ def make_runner(
       async_cfg: ``AsyncAggConfig`` for ``engine="async"`` — buffer
         size, staleness discount, and the adaptive policies (delta merges,
         staleness cutoff, buffer/step adaptation, sampling bias).
+      compression: ``CompressionConfig`` — fake-quantized client→server
+        GAL uploads (int8/int4/top-k with error feedback) plus compressed
+        comm accounting; ``None`` is an exact no-op.
+      client_ranks: per-client effective LoRA rank (resource-adaptive
+        rank heterogeneity); ``None`` = full rank everywhere.
 
     Returns:
       An un-initialized runner: call ``init_phase()`` once, then
@@ -93,7 +100,8 @@ def make_runner(
     return FibecFed(
         model, loss_fn, fl, client_data, seed=seed, optimizer=optimizer,
         fused_optimizer=fused_optimizer, engine=engine, mesh=mesh,
-        scenario=scenario, async_cfg=async_cfg, **preset
+        scenario=scenario, async_cfg=async_cfg, compression=compression,
+        client_ranks=client_ranks, **preset
     )
 
 
@@ -136,5 +144,6 @@ def run_experiment(
         "time_to_target_s": time_to_target,
         "init_s": init_s,
         "total_comm_bytes": float(np.sum(runner.comm_bytes_per_round)),
+        "total_upload_bytes": float(np.sum(runner.comm_upload_bytes_per_round)),
         "wall_s": time.perf_counter() - t0,
     }

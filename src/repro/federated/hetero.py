@@ -74,7 +74,14 @@ class ScenarioPreset:
     * ``burst_period`` — > 0 aligns dispatch starts to multiples of this
       period (bunched arrivals, e.g. overnight charging windows);
     * ``step_time`` — virtual seconds per curriculum step on the
-      reference (speed 1.0) device.
+      reference (speed 1.0) device;
+    * ``slow_rank_fraction`` — the slow group's LoRA rank budget as a
+      fraction of the server rank (resource-adaptive rank, AFLoRA-style):
+      a constrained device trains/ships only the first
+      ``max(1, round(fraction * server_rank))`` rank components;
+    * ``bandwidth_factor`` — the slow group's per-transfer latency
+      multiplier (>= 1; a 2.0 device pays double ``comm_latency`` per
+      pull/push).
     """
 
     name: str = "uniform"
@@ -85,6 +92,8 @@ class ScenarioPreset:
     comm_latency: float = 0.0  # virtual seconds per transfer (pull or push)
     burst_period: float = 0.0  # > 0: dispatches wait for the next burst tick
     step_time: float = 1.0  # virtual seconds per curriculum step (speed 1.0)
+    slow_rank_fraction: float = 1.0  # slow group's LoRA rank / server rank
+    bandwidth_factor: float = 1.0  # slow group's comm-latency multiplier
 
     def __post_init__(self):
         if self.slow_factor < 1.0:
@@ -93,6 +102,10 @@ class ScenarioPreset:
             raise ValueError("slow_fraction must be in [0, 1]")
         if not 0.0 <= self.dropout_prob < 1.0:
             raise ValueError("dropout_prob must be in [0, 1)")
+        if not 0.0 < self.slow_rank_fraction <= 1.0:
+            raise ValueError("slow_rank_fraction must be in (0, 1]")
+        if self.bandwidth_factor < 1.0:
+            raise ValueError("bandwidth_factor is a slowdown; must be >= 1.0")
 
     def with_(self, **overrides) -> "ScenarioPreset":
         """A tweaked copy (e.g. ``STRAGGLER.with_(slow_factor=8.0)``)."""
@@ -110,17 +123,38 @@ class ScenarioPreset:
             comm_latency=max(self.comm_latency, other.comm_latency),
             burst_period=max(self.burst_period, other.burst_period),
             step_time=max(self.step_time, other.step_time),
+            slow_rank_fraction=min(self.slow_rank_fraction, other.slow_rank_fraction),
+            bandwidth_factor=max(self.bandwidth_factor, other.bandwidth_factor),
+        )
+
+    @property
+    def _constrains_slow_group(self) -> bool:
+        return (
+            self.slow_factor > 1.0
+            or self.slow_rank_fraction < 1.0
+            or self.bandwidth_factor > 1.0
         )
 
     def bind(self, num_clients: int, seed: int = 0) -> "BoundScenario":
         """Freeze per-client speed assignments and the scenario RNG stream."""
         rng = np.random.default_rng(seed)
         speed = np.ones(num_clients, np.float64)
+        rank_fraction = np.ones(num_clients, np.float64)
+        bandwidth = np.ones(num_clients, np.float64)
         n_slow = int(round(self.slow_fraction * num_clients))
-        if n_slow and self.slow_factor > 1.0:
+        # one permutation assigns every slow-group axis (speed, rank budget,
+        # link bandwidth) — constrained devices are the same devices, which
+        # is the regime rank adaptation is for. Drawn only when some axis is
+        # actually constrained, so inert presets consume no RNG.
+        if n_slow and self._constrains_slow_group:
             slow_ids = rng.permutation(num_clients)[:n_slow]
             speed[slow_ids] = self.slow_factor
-        return BoundScenario(preset=self, speed=speed, rng=rng)
+            rank_fraction[slow_ids] = self.slow_rank_fraction
+            bandwidth[slow_ids] = self.bandwidth_factor
+        return BoundScenario(
+            preset=self, speed=speed, rng=rng,
+            rank_fraction=rank_fraction, bandwidth=bandwidth,
+        )
 
 
 @dataclasses.dataclass
@@ -135,6 +169,23 @@ class BoundScenario:
     preset: ScenarioPreset
     speed: np.ndarray  # (num_clients,) multiplier, 1.0 = reference device
     rng: np.random.Generator
+    # per-client resource axes; all-ones = the unconstrained fleet
+    rank_fraction: Optional[np.ndarray] = None  # LoRA rank / server rank
+    bandwidth: Optional[np.ndarray] = None  # comm-latency multiplier
+
+    def __post_init__(self):
+        if self.rank_fraction is None:
+            self.rank_fraction = np.ones_like(self.speed)
+        if self.bandwidth is None:
+            self.bandwidth = np.ones_like(self.speed)
+
+    def client_ranks(self, server_rank: int, min_rank: int = 1) -> np.ndarray:
+        """Per-client LoRA ranks under the resource budget: each client
+        trains/ships the first ``max(min_rank, round(fraction * server_rank))``
+        rank components; the unconstrained fleet gets ``server_rank``
+        everywhere (the exact no-op)."""
+        ranks = np.round(self.rank_fraction * server_rank).astype(np.int64)
+        return np.clip(ranks, min_rank, server_rank)
 
     def rel_speed(self, client: int) -> float:
         """Slowdown of ``client`` relative to the *fastest* bound client
@@ -156,8 +207,10 @@ class BoundScenario:
         return base
 
     def round_trip_time(self, client: int, n_steps: int) -> float:
-        """Pull + local training + push, in virtual seconds."""
-        return 2.0 * self.preset.comm_latency + self.compute_time(client, n_steps)
+        """Pull + local training + push, in virtual seconds. A bandwidth-
+        constrained client pays its per-transfer multiplier on both legs."""
+        comm = 2.0 * self.preset.comm_latency * float(self.bandwidth[client])
+        return comm + self.compute_time(client, n_steps)
 
     def is_dropped(self, client: int) -> bool:
         del client  # drops are i.i.d. per dispatch, not per identity
@@ -197,9 +250,16 @@ BURSTY = ScenarioPreset(name="bursty", burst_period=8.0, jitter_sigma=0.2)
 MOBILE = STRAGGLER.compose(DROPOUT, name="mobile").with_(
     jitter_sigma=0.3, dropout_prob=0.15, comm_latency=0.5
 )
+# resource-constrained stragglers: slow devices also carry half the LoRA
+# rank budget and a 2x-slower link — the regime where per-client rank
+# adaptation and compressed uploads actually earn their keep
+CONSTRAINED = STRAGGLER.with_(
+    name="constrained", comm_latency=0.5, slow_rank_fraction=0.5,
+    bandwidth_factor=2.0,
+)
 
 SCENARIOS: Dict[str, ScenarioPreset] = {
-    p.name: p for p in (UNIFORM, STRAGGLER, DROPOUT, BURSTY, MOBILE)
+    p.name: p for p in (UNIFORM, STRAGGLER, DROPOUT, BURSTY, MOBILE, CONSTRAINED)
 }
 
 

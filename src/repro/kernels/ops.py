@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import compress as _cp
 from repro.kernels import fisher_diag as _fd
 from repro.kernels import flash_attention as _fa
 from repro.kernels import masked_update as _mu
@@ -153,6 +154,79 @@ def _scal_row(lr, active, mhat_scale=0.0, vhat_scale=0.0) -> jax.Array:
 def _aligned_leaves(tree, treedef, n):
     """Leaves of an optional companion tree, aligned with the params' leaves."""
     return [None] * n if tree is None else treedef.flatten_up_to(tree)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("qmax", "topk_ratio", "use_thresh", "use_kernel")
+)
+def fake_compress(
+    delta, residual=None, mask=None,
+    *, qmax: int = 0, topk_ratio: float = 1.0, use_thresh: bool = False,
+    use_kernel=None,
+):
+    """Simulated compressed-upload channel over a pytree, with error feedback.
+
+    Per leaf: ``x = delta + residual`` (what the client would like to send),
+    ``y = dequant(quant(x))`` (what the server reconstructs — this is the
+    value that must enter the merge), ``new_residual = x - y`` (the un-sent
+    remainder, carried into the next upload). Returns
+    ``(y_tree, new_residual_tree)``.
+
+    ``qmax`` of 127/7 selects int8/int4 fake-quantization with one scale per
+    consecutive 128 values of the flattened leaf (the kernel's 128-lane row);
+    ``use_thresh`` adds per-leaf top-k thresholding with ``k = max(1,
+    ceil(topk_ratio · active))`` where ``active`` counts the leaf's nonzero
+    ``mask`` entries (the leaf size when ``mask`` is None). The threshold and
+    the top-k per-leaf scale need a global sort/reduce, so they are computed
+    out here and ride into the kernel via the SMEM scalar row. ``residual``
+    None means no error feedback (the returned residual is still valid).
+    Leaves below one tile (or ``use_kernel=False``) take the oracle on the
+    same tiled layout — row-wise scale grain is layout-significant.
+    """
+    per_leaf_scale = use_thresh and qmax > 0
+    leaves_d, treedef = jax.tree.flatten(delta)
+    leaves_r = _aligned_leaves(residual, treedef, len(leaves_d))
+    leaves_mk = _aligned_leaves(mask, treedef, len(leaves_d))
+
+    def one(d, r, mk):
+        x = d if r is None else d + r.astype(d.dtype)
+        thresh = jnp.float32(0.0)
+        scale = jnp.float32(0.0)
+        if use_thresh:
+            flat = jnp.abs(x.reshape(-1)).astype(jnp.float32)
+            n = flat.shape[0]
+            if mk is None:
+                active = jnp.float32(n)
+            else:
+                # mask leaves may be broadcastable (e.g. the (L, 1, 1) GAL
+                # masks): each nonzero mask entry covers size//mk.size values
+                active = jnp.sum((mk != 0).astype(jnp.float32)) * (
+                    d.size // mk.size
+                )
+            k = jnp.maximum(1.0, jnp.ceil(topk_ratio * active)).astype(jnp.int32)
+            thresh = jnp.sort(flat)[jnp.clip(n - k, 0, n - 1)]
+            if qmax:
+                scale = jnp.max(flat) / qmax
+        x2 = _tile2d(x)
+        zero = jnp.float32(0.0)
+        scal = jnp.stack([thresh, scale, zero, zero]).reshape(1, _mu.SCAL_WIDTH)
+        if _use_kernel(x.size, use_kernel):
+            y2, r2 = _cp.fake_compress_2d(
+                x2, scal, qmax=qmax, use_thresh=use_thresh,
+                per_leaf_scale=per_leaf_scale, interpret=_interpret(),
+            )
+        else:
+            y2, r2 = _ref.fake_compress_ref(
+                x2, thresh, scale, qmax=qmax, use_thresh=use_thresh,
+                per_leaf_scale=per_leaf_scale,
+            )
+        return _untile(y2, d), _untile(r2, d)
+
+    outs = [one(*leaf) for leaf in zip(leaves_d, leaves_r, leaves_mk)]
+    return (
+        jax.tree.unflatten(treedef, [o[0] for o in outs]),
+        jax.tree.unflatten(treedef, [o[1] for o in outs]),
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("momentum", "use_kernel"))

@@ -73,6 +73,38 @@ def masked_adamw_update_ref(
     )
 
 
+def fake_compress_ref(
+    x: jax.Array,
+    thresh,
+    scale,
+    *,
+    qmax: int = 0,
+    use_thresh: bool = False,
+    per_leaf_scale: bool = False,
+):
+    """Fused fake-quantize/top-k + error-feedback oracle on the kernel's
+    tiled (R, 128-multiple) layout. Row-wise quantization grain (one scale
+    per 128-lane row) is layout-significant, so the oracle takes the SAME
+    2-D array the kernel would. ``thresh``/``scale`` are per-leaf scalars,
+    only read by the top-k (``use_thresh``/``per_leaf_scale``) variants.
+    Returns ``(y, residual)`` with ``y = dequant(quant(x))``, ``residual =
+    x - y``, both in ``x.dtype``."""
+    xf = x.astype(jnp.float32)
+    if qmax:
+        if per_leaf_scale:
+            s = jnp.asarray(scale, jnp.float32)
+        else:
+            s = jnp.max(jnp.abs(xf), axis=-1, keepdims=True) / qmax
+        safe = jnp.where(s > 0.0, s, 1.0)
+        inv = jnp.where(s > 0.0, 1.0 / safe, 0.0)
+        y = jnp.clip(jnp.round(xf * inv), -qmax, qmax) * s
+    else:
+        y = xf
+    if use_thresh:
+        y = jnp.where(jnp.abs(xf) >= thresh, y, 0.0)
+    return y.astype(x.dtype), (xf - y).astype(x.dtype)
+
+
 def sparse_lora_matmul_ref(
     x: jax.Array, a: jax.Array, b: jax.Array, mask: jax.Array, scale: float = 1.0
 ) -> jax.Array:

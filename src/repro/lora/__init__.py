@@ -4,6 +4,7 @@ from repro.lora.lora import (
     lora_layer_index_tree,
     gal_mask_tree,
     neuron_mask_tree,
+    rank_mask_tree,
     zeros_like_lora,
     lora_param_count,
 )

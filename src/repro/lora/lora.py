@@ -150,6 +150,32 @@ def gal_mask_tree(cfg: ModelConfig, lora, gal_layers: jax.Array) -> Any:
     return out
 
 
+def rank_mask_tree(lora, rank: int) -> Any:
+    """Per-leaf {0.,1.} masks keeping only the first ``rank`` LoRA rank
+    components trainable (resource-adaptive per-client rank).
+
+    A rank-``r_i`` client updates the leading ``r_i`` columns of ``a`` and
+    rows of ``b``; the remaining components stay frozen at the pulled global
+    values, so its delta is exactly zero beyond ``r_i`` — heterogeneous-rank
+    aggregation into the full server rank is then plain (weighted) delta
+    summation, with the pull side projecting down to ``r_i`` components.
+    ``rank >=`` the LoRA rank returns all-ones (the exact no-op).
+    """
+
+    def mk(ab):
+        r = ab["a"].shape[-1]
+        keep = (jnp.arange(r) < rank).astype(jnp.float32)
+        return {
+            "a": keep * jnp.ones_like(ab["a"], jnp.float32),
+            "b": keep[:, None] * jnp.ones_like(ab["b"], jnp.float32),
+        }
+
+    return {
+        group: {t: mk(ab) for t, ab in targets.items()}
+        for group, targets in lora.items()
+    }
+
+
 def neuron_mask_tree(cfg: ModelConfig, lora, neuron_masks: Dict[str, Any]) -> Any:
     """Build per-leaf update masks from per-target neuron keep-masks.
 

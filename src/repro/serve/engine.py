@@ -56,12 +56,17 @@ class ServeEngine:
         done = np.zeros(B, bool)
         steps = 0
         for i in range(max_new_tokens):
-            out[:, i] = np.asarray(token[:, 0])
+            tok = np.asarray(token[:, 0])
             if eos_id is not None:
-                done |= out[:, i] == eos_id
-                if done.all():
-                    steps = i + 1
-                    break
+                # finished rows stay pinned at EOS while the rest of the
+                # batch keeps decoding — their freshly sampled post-EOS
+                # tokens are garbage and must never reach the output
+                tok = np.where(done, eos_id, tok).astype(np.int32)
+                done |= tok == eos_id
+            out[:, i] = tok
+            if eos_id is not None and done.all():
+                steps = i + 1
+                break
             logits, cache = self._decode(self.params, self.lora, token, cache, pos)
             key = jax.random.fold_in(key, i)
             token = self._sample(logits, key, temperature)[:, None].astype(jnp.int32)

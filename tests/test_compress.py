@@ -1,0 +1,295 @@
+"""Compressed GAL uploads: kernel vs oracle, error feedback, wire bytes.
+
+Three layers under test:
+
+- ``repro.kernels.ops.fake_compress`` — the fake-quantize channel round-trip
+  (int8/int4 group-scaled quantization, per-leaf magnitude top-k), Pallas
+  kernel vs the pure-jnp oracle on the same tiled layout;
+- ``repro.federated.compress`` — wire-format byte accounting (values +
+  scales + top-k indices at the leaf's *actual* dtype);
+- the ``FibecFed`` comm accounting built on both. The historical bug this
+  file pins down: ``_gal_bytes_per_client`` hardcoded 4 bytes/value ("f32")
+  and counted GAL *mask entries* — which are broadcastable ``(L, 1, 1)``
+  layer slices, not values — so a bf16 tree billed double and every tree
+  billed ``leaf.size // mask.size``-fold short.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.federated.compress import (
+    INDEX_BYTES,
+    QUANT_GROUP,
+    SCALE_BYTES,
+    CompressionConfig,
+    leaf_upload_bytes,
+    topk_k,
+)
+from repro.kernels import ops
+from repro.kernels import ref as kref
+from repro.kernels.ops import _tile2d
+
+
+# ---------------------------------------------------------------- config
+
+
+def test_config_validation():
+    with pytest.raises(ValueError):
+        CompressionConfig(mode="gzip")
+    with pytest.raises(ValueError):
+        CompressionConfig(mode="topk", topk_values="int2")
+    for bad in (0.0, -0.5, 1.5):
+        with pytest.raises(ValueError):
+            CompressionConfig(mode="topk", topk_ratio=bad)
+
+
+def test_config_properties():
+    assert not CompressionConfig().enabled
+    assert CompressionConfig().qmax == 0
+    assert CompressionConfig(mode="int8").qmax == 127
+    assert CompressionConfig(mode="int4").qmax == 7
+    assert CompressionConfig(mode="topk", topk_values="float").qmax == 0
+    assert CompressionConfig(mode="topk").use_thresh
+    assert not CompressionConfig(mode="int8").use_thresh
+
+
+# ---------------------------------------------------------- byte formulas
+
+
+@pytest.mark.parametrize("itemsize", [4, 2])
+def test_leaf_upload_bytes_exact(itemsize):
+    n = 1000
+    assert leaf_upload_bytes(n, itemsize, None) == n * itemsize
+    assert leaf_upload_bytes(n, itemsize, CompressionConfig()) == n * itemsize
+    assert leaf_upload_bytes(0, itemsize, CompressionConfig(mode="int8")) == 0
+
+    groups = -(-n // QUANT_GROUP)
+    assert (
+        leaf_upload_bytes(n, itemsize, CompressionConfig(mode="int8"))
+        == n + groups * SCALE_BYTES
+    )
+    assert (
+        leaf_upload_bytes(n, itemsize, CompressionConfig(mode="int4"))
+        == (n + 1) // 2 + groups * SCALE_BYTES
+    )
+
+    k = topk_k(n, 0.1)
+    assert k == 100
+    assert (
+        leaf_upload_bytes(n, itemsize, CompressionConfig(mode="topk"))
+        == k + k * INDEX_BYTES + SCALE_BYTES
+    )
+    # float top-k values ship at the leaf's own width, no quantizer scale
+    assert (
+        leaf_upload_bytes(
+            n, itemsize, CompressionConfig(mode="topk", topk_values="float")
+        )
+        == k * itemsize + k * INDEX_BYTES
+    )
+
+
+def test_topk_k_floor():
+    assert topk_k(0, 0.1) == 0
+    assert topk_k(3, 0.01) == 1  # at least one value per nonempty leaf
+    assert topk_k(10, 1.0) == 10
+
+
+# --------------------------------------------------- channel: kernel/oracle
+
+MODES = [
+    dict(qmax=0, use_thresh=False),  # identity
+    dict(qmax=127, use_thresh=False),  # int8
+    dict(qmax=7, use_thresh=False),  # int4
+    dict(qmax=0, use_thresh=True, topk_ratio=0.25),  # top-k, float values
+    dict(qmax=127, use_thresh=True, topk_ratio=0.25),  # top-k, int8 values
+]
+
+
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("shape", [(256, 128), (300, 130), (7, 5)])
+def test_kernel_matches_oracle(rng, mode, shape):
+    x = jax.random.normal(rng, shape) * 0.1
+    yk, rk = ops.fake_compress(x, use_kernel="force", **mode)
+    yo, ro = ops.fake_compress(x, use_kernel=False, **mode)
+    np.testing.assert_allclose(np.asarray(yk), np.asarray(yo), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(rk), np.asarray(ro), atol=1e-6)
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_channel_telescopes(rng, mode):
+    """x = y + residual exactly: nothing is lost, only deferred."""
+    x = {"a": jax.random.normal(rng, (48, 32)), "b": jax.random.normal(rng, (9,))}
+    y, r = ops.fake_compress(x, **mode)
+    for xs, ys, rs in zip(*(jax.tree.leaves(t) for t in (x, y, r))):
+        np.testing.assert_allclose(
+            np.asarray(xs), np.asarray(ys) + np.asarray(rs), atol=1e-6
+        )
+
+
+def test_identity_at_defaults(rng):
+    x = jax.random.normal(rng, (40, 24))
+    y, r = ops.fake_compress(x)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(x))
+    np.testing.assert_array_equal(np.asarray(r), np.zeros_like(x))
+
+
+def test_topk_keeps_exactly_k(rng):
+    x = jax.random.normal(rng, (64, 64))
+    y, _ = ops.fake_compress(x, qmax=0, use_thresh=True, topk_ratio=0.1)
+    assert int(np.sum(np.asarray(y) != 0)) == topk_k(x.size, 0.1)
+
+
+def test_topk_active_count_respects_broadcast_mask(rng):
+    """GAL mask leaves are (L, 1, 1) layer slices: k must be a fraction of
+    the *covered values*, not of the mask's entry count."""
+    L, d1, d2 = 4, 16, 8
+    mask = jnp.asarray([1.0, 1.0, 0.0, 0.0]).reshape(L, 1, 1)
+    x = jax.random.normal(rng, (L, d1, d2)) * mask
+    y, _ = ops.fake_compress(x, mask=mask, qmax=0, use_thresh=True, topk_ratio=0.25)
+    assert int(np.sum(np.asarray(y) != 0)) == topk_k(2 * d1 * d2, 0.25)
+
+
+def test_int8_group_scales_are_layout_significant(rng):
+    """The oracle must quantize on the same tiled (R, 128) grid as the
+    kernel — a flat-layout oracle would draw different group boundaries."""
+    x = jax.random.normal(rng, (300, 130))
+    x2 = _tile2d(x)
+    y2, _ = kref.fake_compress_ref(
+        x2, jnp.float32(0), jnp.float32(0), qmax=127, use_thresh=False,
+        per_leaf_scale=False,
+    )
+    y, _ = ops.fake_compress(x, qmax=127, use_kernel=False)
+    # tolerance far below the ~1e-2 quantization step a wrong grouping shows
+    np.testing.assert_allclose(
+        np.asarray(y2)[: x2.shape[0]],
+        np.asarray(_tile2d(y))[: x2.shape[0]],
+        atol=1e-6,
+    )
+
+
+def test_error_feedback_accumulates(rng):
+    """With EF the quantization error is re-sent: over T uploads of the same
+    delta, sum(y_t) + residual_T == T * delta exactly (telescoping)."""
+    delta = jax.random.normal(rng, (32, 16)) * 0.01
+    res = jnp.zeros_like(delta)
+    total = np.zeros_like(np.asarray(delta))
+    for _ in range(4):
+        y, res = ops.fake_compress(delta, res, qmax=7)
+        total += np.asarray(y)
+    np.testing.assert_allclose(
+        total + np.asarray(res), 4 * np.asarray(delta), atol=1e-5
+    )
+    # and the quantizer alone (no EF) leaves a persistent bias
+    y0, _ = ops.fake_compress(delta, qmax=7)
+    assert np.abs(4 * np.asarray(y0) - 4 * np.asarray(delta)).max() > 1e-4
+
+
+# --------------------------------------------------- merge dtype stability
+
+
+def test_merges_preserve_bf16(rng):
+    from repro.core import engine as eng
+
+    g = {"w": (jax.random.normal(rng, (4, 8, 6)) * 0.1).astype(jnp.bfloat16)}
+    mask = {"w": jnp.asarray([1.0, 0.0, 1.0, 0.0]).reshape(4, 1, 1)}
+    stacked = {
+        "w": (jax.random.normal(rng, (3, 4, 8, 6)) * 0.1).astype(jnp.bfloat16)
+    }
+    w = jnp.asarray([0.5, 0.25, 0.25], jnp.float32)
+    out_v = eng.gal_weighted_merge(g, mask, stacked, w)
+    out_d = eng.gal_delta_merge(g, mask, stacked, w)
+    assert out_v["w"].dtype == jnp.bfloat16
+    assert out_d["w"].dtype == jnp.bfloat16
+    # non-GAL layers are bit-identical passthrough
+    np.testing.assert_array_equal(
+        np.asarray(out_v["w"][1], np.float32), np.asarray(g["w"][1], np.float32)
+    )
+
+
+# -------------------------------------------------- runner comm accounting
+
+
+@pytest.fixture(scope="module")
+def tiny_world():
+    from repro.config import FibecFedConfig, ModelConfig
+    from repro.data import dirichlet_partition, make_keyword_task
+    from repro.models import build_model
+    from repro.train import make_loss_fn
+
+    cfg = ModelConfig(
+        name="tiny-lm", family="dense", num_layers=2, d_model=32, num_heads=2,
+        num_kv_heads=2, d_ff=64, vocab_size=256, head_dim=16, rope="full",
+        norm="rmsnorm", mlp="swiglu", dtype="float32", lora_rank=2,
+        max_seq_len=64,
+    )
+    fl = FibecFedConfig(
+        num_devices=4, devices_per_round=2, rounds=4, batch_size=4,
+        learning_rate=5e-3, fim_warmup_epochs=1, gal_fraction=0.5,
+        sparse_ratio=0.5,
+    )
+    model = build_model(cfg)
+    task = make_keyword_task(n_samples=50, seq_len=12, vocab_size=256, seed=0)
+    parts = dirichlet_partition(task.data["label"], fl.num_devices, 1.0, seed=0)
+    shards = [
+        {k: v[idx] for k, v in task.data.items() if k != "label"} for idx in parts
+    ]
+    return model, make_loss_fn(model), fl, shards
+
+
+def _runner(tiny_world, **kw):
+    from repro.federated import make_runner
+
+    model, loss_fn, fl, shards = tiny_world
+    r = make_runner("fibecfed", model, loss_fn, fl, shards, seed=7, **kw)
+    r.init_phase()
+    return r
+
+
+def _expected_per_client(runner, comp):
+    down = up = 0
+    for mm, leaf in zip(
+        jax.tree.leaves(runner._gal_mask_tree), jax.tree.leaves(runner.global_lora)
+    ):
+        n = int(np.sum(np.asarray(mm) != 0)) * (leaf.size // mm.size)
+        down += n * leaf.dtype.itemsize
+        up += leaf_upload_bytes(n, leaf.dtype.itemsize, comp)
+    return down, up
+
+
+def test_comm_bytes_dtype_and_broadcast_aware(tiny_world):
+    runner = _runner(tiny_world)
+    down, up = _expected_per_client(runner, None)
+    assert down == up  # raw round trip is symmetric
+    assert runner._gal_bytes_per_client() == down + up
+
+    # bf16 server tree: the wire bill follows the leaf dtype, not "4 # f32"
+    runner.global_lora = jax.tree.map(
+        lambda x: x.astype(jnp.bfloat16), runner.global_lora
+    )
+    runner._gal_leaf_cache = None
+    runner._comm_bytes_cache = {}
+    assert runner._gal_bytes_per_client() == (down + up) // 2
+
+
+def test_round_comm_matches_wire_format(tiny_world):
+    comp = CompressionConfig(mode="topk", topk_ratio=0.1, topk_values="int8")
+    runner = _runner(tiny_world, compression=comp)
+    h = runner.run_round(0)
+    down, up = _expected_per_client(runner, comp)
+    k = runner.fl.devices_per_round
+    assert runner.comm_bytes_per_round == [k * (down + up)]
+    assert runner.comm_upload_bytes_per_round == [k * up]
+    assert h["comm_bytes"] == float(k * (down + up))
+
+    # compressed payload is a small fraction of the raw upload
+    raw_down, raw_up = _expected_per_client(runner, None)
+    assert up * 4 <= raw_up
+
+
+def test_rank_projection_scales_bytes(tiny_world):
+    runner = _runner(tiny_world, client_ranks=[2, 1, 1, 2])
+    full_down, full_up = runner._client_comm_bytes(0)
+    half_down, half_up = runner._client_comm_bytes(1)
+    assert half_down == full_down // 2
+    assert half_up == full_up // 2

@@ -420,6 +420,204 @@ def test_mesh_rejected_for_unsharded_engines(world5):
         )
 
 
+# --------------------------------------------------------------------------
+# compressed uploads + resource-adaptive rank
+# --------------------------------------------------------------------------
+
+
+def _leaves_equal(a, b):
+    return all(
+        np.array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b))
+    )
+
+
+def _assert_close_trees(a, b, boundary_frac: float = 0.0):
+    """allclose over trees; ``boundary_frac`` > 0 tolerates that fraction of
+    elements violating the tight tolerance (top-k selection is boundary-
+    brittle: the engines' deltas differ at float-associativity level, so a
+    near-tied k-th magnitude can flip one element in or out — the flipped
+    element is still bounded by the discarded-value scale)."""
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        x, y = np.asarray(x), np.asarray(y)
+        if boundary_frac == 0.0:
+            np.testing.assert_allclose(x, y, atol=5e-5, rtol=1e-4)
+            continue
+        diff = np.abs(x - y)
+        bad = diff > (5e-5 + 1e-4 * np.abs(y))
+        assert bad.mean() <= boundary_frac, (bad.mean(), diff.max())
+        assert diff.max() < 1e-2, diff.max()
+
+
+def test_compression_none_is_exact_noop(world):
+    """mode="none" (and full client_ranks) must route through the untouched
+    PR 5 programs — bit-identical global trees, identical comm ints."""
+    from repro.federated import CompressionConfig
+
+    model, loss_fn, client_data = world
+    r_base, _ = _run(world, "fibecfed", "adamw", "vectorized")
+    r_none = make_runner(
+        "fibecfed", model, loss_fn, FL, client_data,
+        optimizer="adamw", engine="vectorized", seed=7,
+        compression=CompressionConfig(mode="none"),
+        client_ranks=[CFG.lora_rank] * FL.num_devices,
+    )
+    r_none.init_phase()
+    for t in range(ROUNDS):
+        r_none.run_round(t)
+    assert r_none.compression is None and r_none.client_ranks is None
+    assert _leaves_equal(r_base.global_lora, r_none.global_lora)
+    assert r_base.comm_bytes_per_round == r_none.comm_bytes_per_round
+    assert r_base.comm_upload_bytes_per_round == r_none.comm_upload_bytes_per_round
+
+
+@pytest.mark.parametrize(
+    "comp_kw",
+    [
+        dict(mode="int8"),
+        dict(mode="topk", topk_ratio=0.25, topk_values="int8"),
+        dict(mode="topk", topk_ratio=0.25, topk_values="float", error_feedback=False),
+    ],
+)
+def test_compressed_engines_equivalent(world, comp_kw):
+    """loop (spec: host-side channel sim per client) and vectorized (fused
+    in-program vmap'd kernel) must agree under every compression mode —
+    same global trees, same EF residual evolution, same wire bytes."""
+    from repro.federated import CompressionConfig
+
+    model, loss_fn, client_data = world
+    comp = CompressionConfig(**comp_kw)
+    runners = {}
+    for engine in ("loop", "vectorized"):
+        r = make_runner(
+            "fibecfed", model, loss_fn, FL, client_data,
+            optimizer="adamw", engine=engine, seed=7, compression=comp,
+        )
+        r.init_phase()
+        for t in range(ROUNDS):
+            r.run_round(t)
+        runners[engine] = r
+    r_loop, r_vec = runners["loop"], runners["vectorized"]
+    frac = 0.02 if comp.use_thresh else 0.0
+    _assert_close_trees(r_loop.global_lora, r_vec.global_lora, boundary_frac=frac)
+    assert r_loop.comm_bytes_per_round == r_vec.comm_bytes_per_round
+    assert r_loop.comm_upload_bytes_per_round == r_vec.comm_upload_bytes_per_round
+    # the compressed push is strictly cheaper than the raw pull
+    for total, up in zip(
+        r_loop.comm_bytes_per_round, r_loop.comm_upload_bytes_per_round
+    ):
+        assert up < total - up
+    if comp.error_feedback:
+        stacked = [
+            jax.tree.map(lambda x, ci=ci: x[ci], r_vec._stacked_residual)
+            for ci in range(FL.num_devices)
+        ]
+        for cl, sr in zip(r_loop.clients, stacked):
+            if cl.ef_residual is not None:
+                _assert_close_trees(cl.ef_residual, sr, boundary_frac=frac)
+
+
+def test_topk_full_ratio_float_matches_uncompressed(world):
+    """ratio=1.0 float top-k keeps everything at full precision: the channel
+    is the identity, so the run must match the uncompressed engine."""
+    from repro.federated import CompressionConfig
+
+    model, loss_fn, client_data = world
+    r_base, _ = _run(world, "fibecfed", "adamw", "loop")
+    r_id = make_runner(
+        "fibecfed", model, loss_fn, FL, client_data,
+        optimizer="adamw", engine="loop", seed=7,
+        compression=CompressionConfig(
+            mode="topk", topk_ratio=1.0, topk_values="float", error_feedback=False
+        ),
+    )
+    r_id.init_phase()
+    for t in range(ROUNDS):
+        r_id.run_round(t)
+    _assert_close_trees(r_base.global_lora, r_id.global_lora)
+    # but it still pays for indices on the wire
+    assert r_id.comm_upload_bytes_per_round[0] > r_base.comm_upload_bytes_per_round[0]
+
+
+def test_rank_heterogeneous_engines_equivalent(world):
+    """Per-client ranks fold into the update masks: loop and vectorized must
+    agree, low-rank clients' beyond-rank components never move, and the
+    rank projection shrinks their wire bill."""
+    model, loss_fn, client_data = world
+    ranks = [CFG.lora_rank, 1, 1, CFG.lora_rank]
+    runners = {}
+    for engine in ("loop", "vectorized"):
+        r = make_runner(
+            "fibecfed", model, loss_fn, FL, client_data,
+            optimizer="adamw", engine=engine, seed=7, client_ranks=ranks,
+        )
+        r.init_phase()
+        for t in range(ROUNDS):
+            r.run_round(t)
+        runners[engine] = r
+    r_loop, r_vec = runners["loop"], runners["vectorized"]
+    _assert_close_trees(r_loop.global_lora, r_vec.global_lora)
+    assert r_loop.comm_bytes_per_round == r_vec.comm_bytes_per_round
+
+    # a rank-1 client bills exactly rank/R of the full-rank round trip
+    full = r_loop._client_comm_bytes(0)
+    half = r_loop._client_comm_bytes(1)
+    assert half[0] * CFG.lora_rank == full[0] * 1
+    r_full, _ = _run(world, "fibecfed", "adamw", "loop")
+    assert sum(r_loop.comm_bytes_per_round) <= sum(r_full.comm_bytes_per_round)
+
+
+def test_async_compressed_matches_loop_compressed(world):
+    """The degenerate async configuration stays synchronous FedAvg under
+    compression (via async_cfg.compression), in both merge modes."""
+    from repro.federated import AsyncAggConfig, CompressionConfig
+
+    model, loss_fn, client_data = world
+    comp = CompressionConfig(mode="topk", topk_ratio=0.25, topk_values="int8")
+    r_loop = make_runner(
+        "fibecfed", model, loss_fn, FL, client_data,
+        optimizer="adamw", engine="loop", seed=7, compression=comp,
+    )
+    r_loop.init_phase()
+    for t in range(ROUNDS):
+        r_loop.run_round(t)
+    for mode_kw in (dict(), dict(merge_mode="delta", server_lr=1.0)):
+        r_async = make_runner(
+            "fibecfed", model, loss_fn, FL, client_data,
+            optimizer="adamw", engine="async", seed=7,
+            async_cfg=AsyncAggConfig(compression=comp, **mode_kw),
+        )
+        r_async.init_phase()
+        for t in range(ROUNDS):
+            r_async.run_round(t)
+        _assert_close_trees(
+            r_loop.global_lora, r_async.global_lora, boundary_frac=0.02
+        )
+        assert r_loop.comm_bytes_per_round == r_async.comm_bytes_per_round
+        assert (
+            r_loop.comm_upload_bytes_per_round
+            == r_async.comm_upload_bytes_per_round
+        )
+
+
+def test_constrained_scenario_derives_slow_ranks(world):
+    """The "constrained" preset (slow_rank_fraction + bandwidth_factor)
+    derives per-client ranks from the scenario's slow group and prices the
+    bandwidth factor into round-trip time; the run stays finite."""
+    model, loss_fn, client_data = world
+    runner = make_runner(
+        "fibecfed", model, loss_fn, FL, client_data,
+        optimizer="adamw", engine="async", scenario="constrained", seed=7,
+    )
+    runner.init_phase()
+    history = [runner.run_round(t) for t in range(ROUNDS)]
+    assert runner.client_ranks is not None
+    assert np.any(runner.client_ranks < CFG.lora_rank)
+    assert np.any(runner.client_ranks == CFG.lora_rank)
+    for h in history:
+        assert np.isfinite(h["loss"])
+
+
 def test_stack_clients_pads_inert_rows():
     data = [
         {"tokens": np.arange(10, dtype=np.int32).reshape(5, 2)},
