@@ -1,11 +1,14 @@
 """Batched serving example: prefill + decode with KV / SSM-state caches.
 
   PYTHONPATH=src python examples/serve_batch.py --arch mamba2-1.3b
+  PYTHONPATH=src python examples/serve_batch.py --arch qwen2-0.5b --continuous
 
 Loads a REDUCED variant of any assigned architecture (CPU-friendly), builds
 the ServeEngine, and generates continuations for a batch of prompts —
 including the attention-free SSM decode (constant-size state) and the
-ring-buffer sliding-window decode used for long_500k.
+ring-buffer sliding-window decode used for long_500k. ``--continuous`` drives
+the request API instead (submit / drain through a small slot pool), printing
+per-request completions and time-to-first-token.
 """
 import os
 import sys
@@ -16,11 +19,11 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import ARCHS, ASSIGNED
 from repro.models import build_model
-from repro.serve import ServeEngine
+from repro.serve import Request, SamplingParams, ServeEngine, make_prompt_batch
 
 
 def main():
@@ -30,6 +33,9 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=24)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--continuous", action="store_true",
+                    help="drive the submit/step/drain request API")
+    ap.add_argument("--num-slots", type=int, default=2)
     args = ap.parse_args()
 
     cfg = ARCHS[args.arch].reduced()
@@ -40,17 +46,38 @@ def main():
     params = model.init_params(rng)
     lora = model.init_lora(rng)
 
-    batch = {"tokens": jax.random.randint(rng, (args.batch, args.prompt_len), 0, cfg.vocab_size)}
-    if cfg.family == "vlm":
-        batch["prefix_embeds"] = jnp.zeros(
-            (args.batch, cfg.num_prefix_embeddings, cfg.d_model), cfg.dtype
-        )
-    if cfg.family in ("encdec", "audio"):
-        batch["encoder_embeds"] = jnp.zeros(
-            (args.batch, cfg.encoder_seq_len, cfg.d_model), cfg.dtype
-        )
+    batch = make_prompt_batch(cfg, rng, args.batch, args.prompt_len)
+    engine = ServeEngine(
+        model, params, lora,
+        cache_len=args.prompt_len + args.new_tokens,
+        num_slots=args.num_slots,
+        max_new_cap=args.new_tokens,
+    )
 
-    engine = ServeEngine(model, params, lora, cache_len=args.prompt_len + args.new_tokens)
+    if args.continuous:
+        tokens = np.asarray(batch["tokens"])
+        extras = {k: np.asarray(v) for k, v in batch.items() if k != "tokens"}
+        sp = SamplingParams(
+            max_new_tokens=args.new_tokens, temperature=args.temperature
+        )
+        t0 = time.time()
+        for i in range(args.batch):
+            engine.submit(Request(
+                tokens=tokens[i], sampling=sp,
+                extras={k: v[i] for k, v in extras.items()} or None,
+            ))
+        comps = engine.drain()
+        dt = time.time() - t0
+        total = sum(c.steps for c in comps)
+        print(f"arch={args.arch} family={cfg.family} "
+              f"slots={args.num_slots} requests={args.batch}")
+        print(f"generated {total} tokens in {dt:.1f}s "
+              f"({total / dt:.1f} tok/s incl. compile)")
+        for c in sorted(comps, key=lambda c: c.request_id):
+            print(f"  req {c.request_id}: ttft={c.ttft_s:.2f}s "
+                  f"{c.finish_reason}: {c.tokens.tolist()}")
+        return
+
     t0 = time.time()
     res = engine.generate(
         batch, max_new_tokens=args.new_tokens, temperature=args.temperature

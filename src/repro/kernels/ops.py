@@ -1,13 +1,13 @@
 """Public jit'd wrappers around the Pallas kernels.
 
 Each wrapper handles padding/reshaping to kernel tile constraints and falls
-back to the oracle for shapes below one tile. ``REPRO_PALLAS_INTERPRET``
-(default on — this container is CPU) switches interpret mode.
+back to the oracle for shapes below one tile. Interpret mode is platform-
+aware (``kernels.sparse_lora.resolve_interpret``): ``REPRO_PALLAS_INTERPRET``
+overrides when set, else kernels interpret everywhere except real TPUs.
 """
 from __future__ import annotations
 
 import functools
-import os
 
 import jax
 import jax.numpy as jnp
@@ -28,7 +28,8 @@ MIN_KERNEL_LEAF = _mu.BLOCK_ROWS * _mu.BLOCK_COLS
 
 
 def _interpret() -> bool:
-    return os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+    # platform-aware shared default: env override, else interpret off-TPU only
+    return _sl.resolve_interpret(None)
 
 
 def _pad_to(x: jax.Array, axis: int, multiple: int):
@@ -80,6 +81,77 @@ def sparse_lora_apply(x, a, b, mask, scale: float = 1.0):
     else:
         y = _sl.sparse_lora_matmul(x2, a, b, mask, scale, interpret=_interpret())
     return y.reshape(*lead, N)
+
+
+@functools.partial(jax.jit, static_argnames=("scale",))
+def batched_sparse_lora_apply(x, idx, a, b, mask, scale: float = 1.0):
+    """Multi-adapter apply: ``y[m] = x[m] @ a[idx[m]] @ (b[idx[m]] ⊙
+    mask[idx[m]]) · scale``. x (..., K); idx (...,); a (A, K, r);
+    b (A, r, N); mask (A, N)."""
+    lead = x.shape[:-1]
+    K = x.shape[-1]
+    N = b.shape[2]
+    x2 = x.reshape(-1, K)
+    idx2 = idx.reshape(-1).astype(jnp.int32)
+    M = x2.shape[0]
+    if M % _sl.BM or N % _sl.BN or K % _sl.BK:
+        x2, _ = _pad_to(x2, 0, _sl.BM)
+        x2, _ = _pad_to(x2, 1, _sl.BK)
+        # padded rows read adapter 0's weights against all-zero x rows → 0
+        idx2, _ = _pad_to(idx2, 0, _sl.BM)
+        a_p, _ = _pad_to(a, 1, _sl.BK)
+        b_p, _ = _pad_to(b, 2, _sl.BN)
+        m_p, _ = _pad_to(mask, 1, _sl.BN)
+        y = _sl.batched_sparse_lora_matmul(
+            x2, idx2, a_p, b_p, m_p, scale, interpret=_interpret()
+        )
+        y = y[:M, :N]
+    else:
+        y = _sl.batched_sparse_lora_matmul(
+            x2, idx2, a, b, mask, scale, interpret=_interpret()
+        )
+    return y.reshape(*lead, N)
+
+
+def sparse_lora_apply_packed(x, a, b, mask, scale: float = 1.0):
+    """Gather-packed apply: identical result to :func:`sparse_lora_apply`,
+    but the frozen columns of ``b`` never reach the matmul.
+
+    ``mask`` must be CONCRETE (host-visible — the §4.3.2 neuron mask is fixed
+    per cohort, so this holds everywhere it matters): the kept-column index
+    set determines array shapes, so this wrapper is not itself jittable. The
+    pack → rank-r matmul → scatter pipeline pays MXU work proportional to
+    ``N_keep = mask.sum()`` instead of ``N`` — at ρ ≤ 0.5 that beats
+    zero-multiplying frozen columns in-tile.
+    """
+    keep = np.flatnonzero(np.asarray(mask))
+    lead = x.shape[:-1]
+    N = b.shape[1]
+    if keep.size == 0:
+        return jnp.zeros((*lead, N), x.dtype)
+    yp = _packed_matmul(x, a, b[:, keep], scale)
+    return jnp.zeros((*lead, N), x.dtype).at[..., keep].set(yp)
+
+
+@functools.partial(jax.jit, static_argnames=("scale",))
+def _packed_matmul(x, a, b_packed, scale: float):
+    lead = x.shape[:-1]
+    K = x.shape[-1]
+    Nk = b_packed.shape[1]
+    x2 = x.reshape(-1, K)
+    M = x2.shape[0]
+    if M % _sl.BM or Nk % _sl.BN or K % _sl.BK:
+        x2, _ = _pad_to(x2, 0, _sl.BM)
+        x2, _ = _pad_to(x2, 1, _sl.BK)
+        a_p, _ = _pad_to(a, 0, _sl.BK)
+        b_p, _ = _pad_to(b_packed, 1, _sl.BN)
+        y = _sl.sparse_lora_matmul_packed(x2, a_p, b_p, scale, interpret=_interpret())
+        y = y[:M, :Nk]
+    else:
+        y = _sl.sparse_lora_matmul_packed(
+            x2, a, b_packed, scale, interpret=_interpret()
+        )
+    return y.reshape(*lead, Nk)
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window"))

@@ -113,6 +113,32 @@ def sparse_lora_matmul_ref(
     return (scale * jnp.dot(xa, bm)).astype(x.dtype)
 
 
+def batched_sparse_lora_matmul_ref(
+    x: jax.Array,  # (M, K)
+    idx: jax.Array,  # (M,) int32
+    a: jax.Array,  # (A, K, r)
+    b: jax.Array,  # (A, r, N)
+    mask: jax.Array,  # (A, N)
+    scale: float = 1.0,
+) -> jax.Array:
+    """Per-row adapter gather oracle: ``y[m] = x[m] @ a[idx[m]] @ (b[idx[m]]
+    ⊙ mask[idx[m]]) · scale``."""
+    xa = jnp.einsum(
+        "mk,mkr->mr", x.astype(jnp.float32), a[idx].astype(jnp.float32)
+    )
+    bm = (b * mask[:, None, :].astype(b.dtype))[idx].astype(jnp.float32)
+    return (scale * jnp.einsum("mr,mrn->mn", xa, bm)).astype(x.dtype)
+
+
+def sparse_lora_matmul_packed_ref(
+    x: jax.Array, a: jax.Array, b_packed: jax.Array, scale: float = 1.0
+) -> jax.Array:
+    """Dense oracle on gather-packed ``b`` (columns already restricted to the
+    kept set); equals the masked oracle's kept columns by construction."""
+    xa = jnp.dot(x.astype(jnp.float32), a.astype(jnp.float32))
+    return (scale * jnp.dot(xa, b_packed.astype(jnp.float32))).astype(x.dtype)
+
+
 def flash_attention_ref(
     q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True, window=None
 ) -> jax.Array:

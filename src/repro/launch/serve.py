@@ -9,7 +9,6 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 
 
 def main():
@@ -23,7 +22,7 @@ def main():
 
     from repro.configs import get_config
     from repro.models import build_model
-    from repro.serve import ServeEngine
+    from repro.serve import ServeEngine, make_prompt_batch
 
     cfg = get_config(args.arch)
     if len(jax.devices()) == 1:
@@ -32,17 +31,7 @@ def main():
     rng = jax.random.PRNGKey(0)
     params = model.init_params(rng)
     lora = model.init_lora(rng)
-    batch = {
-        "tokens": jax.random.randint(rng, (args.batch, args.prompt_len), 0, cfg.vocab_size)
-    }
-    if cfg.family == "vlm":
-        batch["prefix_embeds"] = jnp.zeros(
-            (args.batch, cfg.num_prefix_embeddings, cfg.d_model), cfg.dtype
-        )
-    if cfg.family in ("encdec", "audio"):
-        batch["encoder_embeds"] = jnp.zeros(
-            (args.batch, cfg.encoder_seq_len, cfg.d_model), cfg.dtype
-        )
+    batch = make_prompt_batch(cfg, rng, args.batch, args.prompt_len)
     engine = ServeEngine(
         model, params, lora, cache_len=args.prompt_len + args.new_tokens
     )

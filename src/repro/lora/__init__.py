@@ -3,8 +3,10 @@ from repro.lora.lora import (
     lora_num_logical_layers,
     lora_layer_index_tree,
     gal_mask_tree,
+    gather_adapter_slots,
     neuron_mask_tree,
     rank_mask_tree,
+    stack_adapter_trees,
     zeros_like_lora,
     lora_param_count,
 )

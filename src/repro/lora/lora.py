@@ -132,6 +132,33 @@ def lora_layer_index_tree(cfg: ModelConfig, lora) -> Any:
     return out
 
 
+def stack_adapter_trees(adapters) -> Any:
+    """Stack a list of same-shaped LoRA trees along a new leading adapter
+    axis: each leaf (L, d_in, r) → (A, L, d_in, r), unstacked (d_in, r) →
+    (A, d_in, r). The registry format for multi-tenant serving."""
+    return jax.tree.map(lambda *ls: jnp.stack(ls), *adapters)
+
+
+def gather_adapter_slots(cfg: ModelConfig, stacked, idx: jax.Array) -> Any:
+    """Gather per-slot adapters out of a :func:`stack_adapter_trees` stack.
+
+    ``idx``: (B,) int32 adapter index per batch slot. Stacked-group leaves
+    (A, L, ...) gather to (B, L, ...) then move the layer axis back in front
+    → (L, B, ...), so a layer scan slices per-slot (B, ...) leaves that
+    :func:`repro.models.layers.linear` applies row-wise. Unstacked groups
+    ((A, d_in, r), e.g. hybrid "shared") gather straight to (B, d_in, r).
+    """
+    out = {}
+    for group, (_, n) in _group_offsets(cfg).items():
+        if n:
+            out[group] = jax.tree.map(
+                lambda leaf: jnp.moveaxis(leaf[idx], 0, 1), stacked[group]
+            )
+        else:
+            out[group] = jax.tree.map(lambda leaf: leaf[idx], stacked[group])
+    return out
+
+
 def gal_mask_tree(cfg: ModelConfig, lora, gal_layers: jax.Array) -> Any:
     """gal_layers: bool (num_logical_layers,). Returns {0.,1.} masks matching lora."""
     gal = jnp.asarray(gal_layers, jnp.float32)

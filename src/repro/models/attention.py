@@ -196,6 +196,21 @@ def blockwise_attention(
     return out
 
 
+def scatter_decode_kv(cache: jax.Array, update: jax.Array, slot) -> jax.Array:
+    """Write a decode-step KV update into its cache slot(s).
+
+    cache: (B, T, KVH, D); update: (B, 1, KVH, D); ``slot`` a scalar write
+    index (uniform batch) or a (B,) vector of per-row indices (continuous
+    batching). Shared by every family's decode cache update.
+    """
+    upd = update.astype(cache.dtype)
+    if jnp.ndim(slot) == 1:
+        return jax.vmap(
+            lambda c, u, s: jax.lax.dynamic_update_slice_in_dim(c, u, s, axis=0)
+        )(cache, upd, slot)
+    return jax.lax.dynamic_update_slice_in_dim(cache, upd, slot, axis=1)
+
+
 def decode_attention(
     q: jax.Array,
     k_cache: jax.Array,
@@ -207,9 +222,11 @@ def decode_attention(
     """One-token attention against a cache.
 
     q: (B, 1, H, D); caches: (B, T, KVH, D). ``position`` = number of tokens
-    already generated (scalar). For a ring-buffer cache (sliding window),
-    ``ring=True`` attends to all T slots that are valid once position >= T and
-    the rotation is irrelevant to softmax (set union of positions).
+    already generated — a scalar (uniform batch) or a (B,) vector of per-row
+    positions (continuous batching, where each slot is at its own depth).
+    For a ring-buffer cache (sliding window), ``ring=True`` attends to all T
+    slots that are valid once position >= T and the rotation is irrelevant to
+    softmax (set union of positions).
     """
     B, _, H, D = q.shape
     T, KVH = k_cache.shape[1], k_cache.shape[2]
@@ -218,6 +235,15 @@ def decode_attention(
     scale = 1.0 / jnp.sqrt(jnp.array(D, jnp.float32))
     scores = _gqa_scores(qg, k_cache, scale)  # (B,KVH,G,1,T)
     slot = jnp.arange(T)
+    if jnp.ndim(position) == 1:  # per-slot positions -> (B, T) validity
+        if ring:
+            valid = slot[None, :] < jnp.minimum(position + 1, T)[:, None]
+        else:
+            valid = slot[None, :] <= position[:, None]
+        scores = jnp.where(valid[:, None, None, None, :], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = _gqa_out(probs, v_cache)
+        return out.reshape(B, 1, H, D)
     if ring:
         valid = slot < jnp.minimum(position + 1, T)
     else:

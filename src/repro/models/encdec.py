@@ -150,8 +150,8 @@ def _decoder_layer(
         k_c, v_c = self_cache
         T = k_c.shape[1]
         slot = (cache_position % T) if ring else cache_position
-        k_c = jax.lax.dynamic_update_slice_in_dim(k_c, k.astype(k_c.dtype), slot, axis=1)
-        v_c = jax.lax.dynamic_update_slice_in_dim(v_c, v.astype(v_c.dtype), slot, axis=1)
+        k_c = attn.scatter_decode_kv(k_c, k, slot)
+        v_c = attn.scatter_decode_kv(v_c, v, slot)
         o = attn.decode_attention(q, k_c, v_c, cache_position, ring=ring)
         new_cache = (k_c, v_c)
     else:
@@ -307,10 +307,12 @@ def encdec_decode_step(
     d = cfg.d_model
     dim = jnp.arange(d // 2, dtype=jnp.float32)
     freq = jnp.exp(-_math.log(10000.0) * dim / max(d // 2 - 1, 1))
-    ang = position.astype(jnp.float32) * freq
-    pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)]).astype(h.dtype)
-    h = h + pe[None, None, :]
-    positions = jnp.reshape(position, (1, 1))
+    # position may be scalar or (B,) per-slot; compute one PE row per row
+    pos_v = jnp.reshape(position, (-1,)).astype(jnp.float32)
+    ang = pos_v[:, None] * freq  # (Bp, d//2)
+    pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(h.dtype)
+    h = h + pe[:, None, :]
+    positions = jnp.reshape(position, (-1, 1))
 
     def body(h, xs):
         p, lr, k_c, v_c, ck, cv = xs

@@ -80,8 +80,8 @@ def _shared_attn_block(
     new_cache = None
     if cache is not None:
         k_c, v_c = cache
-        k_c = jax.lax.dynamic_update_slice_in_dim(k_c, k.astype(k_c.dtype), cache_position, axis=1)
-        v_c = jax.lax.dynamic_update_slice_in_dim(v_c, v.astype(v_c.dtype), cache_position, axis=1)
+        k_c = attn.scatter_decode_kv(k_c, k, cache_position)
+        v_c = attn.scatter_decode_kv(v_c, v, cache_position)
         o = attn.decode_attention(q, k_c, v_c, cache_position)
         new_cache = (k_c, v_c)
         kv_for_cache = None
@@ -266,7 +266,7 @@ def hybrid_decode_step(
     lora_scale = lora_scale if lora_scale is not None else cfg.lora_alpha / cfg.lora_rank
     n_apps, period, remainder = _split_counts(cfg)
     h = jnp.take(params["embed"], token, axis=0)
-    positions = jnp.reshape(position, (1, 1))
+    positions = jnp.reshape(position, (-1, 1))  # (1,1) scalar / (B,1) per-slot
     m_params, m_lora = params["mamba"], lora["mamba"]
 
     def mamba_layer_step(h, p_slice, l_slice, conv_buf, state):

@@ -38,12 +38,21 @@ def linear(x: jax.Array, p, lora=None, lora_scale: float = 1.0) -> jax.Array:
     """``x @ w (+ b)`` with an optional LoRA low-rank delta.
 
     x: (..., d_in). p: {"w": (d_in, d_out)[, "b"]}.
-    lora: {"a": (d_in, r), "b": (r, d_out)} or None.
+    lora: {"a": (d_in, r), "b": (r, d_out)} or None. When the lora leaves
+    carry a leading batch axis — ``a``: (B, d_in, r), ``b``: (B, r, d_out),
+    with x (B, ..., d_in) — each batch row gets its own adapter delta (the
+    multi-tenant serving path, where row b holds slot b's gathered adapter).
     """
     y = jnp.einsum("...i,io->...o", x, p["w"])
     if lora is not None:
-        z = jnp.einsum("...i,ir->...r", x, lora["a"].astype(x.dtype))
-        y = y + lora_scale * jnp.einsum("...r,ro->...o", z, lora["b"].astype(x.dtype))
+        a = lora["a"].astype(x.dtype)
+        b = lora["b"].astype(x.dtype)
+        if a.ndim == 3:  # per-slot adapters: contract within each batch row
+            z = jnp.einsum("b...i,bir->b...r", x, a)
+            y = y + lora_scale * jnp.einsum("b...r,bro->b...o", z, b)
+        else:
+            z = jnp.einsum("...i,ir->...r", x, a)
+            y = y + lora_scale * jnp.einsum("...r,ro->...o", z, b)
     if "b" in p:
         y = y + p["b"].astype(y.dtype)
     return y

@@ -40,7 +40,14 @@ class ModelFns:
     forward_probe: Callable[..., Any]
     init_cache: Callable[..., Any]  # (batch, cache_len) -> cache
     prefill: Callable[..., Any]  # (params, lora, batch, cache_len) -> (logits, cache, pos)
-    decode_step: Callable[..., Any]  # (params, lora, token, cache, position) -> (logits, cache)
+    # (params, lora, token, cache, position) -> (logits, cache).
+    # ``position`` is a scalar (uniform batch, the training-eval path) or a
+    # (B,) int32 vector of per-slot positions (continuous-batching serving,
+    # where each cache row is at its own depth). ``lora`` leaves may carry a
+    # per-slot batch axis — a: (L, B, d_in, r), b: (L, B, r, d_out) (see
+    # repro.lora.gather_adapter_slots) — giving every batch row its own
+    # adapter; unbatched leaves mean one shared adapter, exactly as before.
+    decode_step: Callable[..., Any]
     input_specs: Callable[[InputShape], Dict[str, Any]]
     supports: Callable[[InputShape], bool]
 

@@ -165,8 +165,8 @@ def attention_sublayer(
         k_cache, v_cache = cache
         T = k_cache.shape[1]
         slot = (cache_position % T) if ring else cache_position
-        k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k.astype(k_cache.dtype), slot, axis=1)
-        v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v.astype(v_cache.dtype), slot, axis=1)
+        k_cache = attn.scatter_decode_kv(k_cache, k, slot)
+        v_cache = attn.scatter_decode_kv(v_cache, v, slot)
         o = attn.decode_attention(q, k_cache, v_cache, cache_position, ring=ring)
         new_cache = (k_cache, v_cache)
     else:
@@ -352,13 +352,13 @@ def decoder_decode_step(
     params, lora, token, cfg: ModelConfig, cache, position,
     *, lora_scale=None, ring: bool = False,
 ):
-    """One-token step. token: (B, 1) int32. Returns (logits, new_cache)."""
+    """One-token step. token: (B, 1) int32; ``position`` scalar (uniform
+    batch) or (B,) per-slot positions. Returns (logits, new_cache)."""
     lora_scale = lora_scale if lora_scale is not None else cfg.lora_alpha / cfg.lora_rank
     h = jnp.take(params["embed"], token, axis=0)
     if cfg.family == "vlm":
         h = h * jnp.sqrt(jnp.array(cfg.d_model, jnp.float32)).astype(h.dtype)
-    positions = position[None, None] if jnp.ndim(position) == 0 else position
-    positions = jnp.reshape(position, (1, 1))
+    positions = jnp.reshape(position, (-1, 1))  # (1,1) scalar / (B,1) per-slot
 
     def body(h, xs):
         p_slice, lora_slice, k_c, v_c = xs

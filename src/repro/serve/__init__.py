@@ -1,1 +1,10 @@
-from repro.serve.engine import ServeEngine, GenerationResult
+from repro.serve.engine import GenerationResult, ReferenceEngine, ServeEngine
+from repro.serve.requests import (
+    Completion,
+    Request,
+    SamplingParams,
+    batch_from_requests,
+    make_prompt_batch,
+    requests_from_batch,
+)
+from repro.serve.scheduler import SlotScheduler

@@ -1,19 +1,50 @@
-"""Batched serving engine: prefill + decode loop over any ModelFns.
+"""Serving engines: jitted continuous-batching `ServeEngine` + the seed
+`ReferenceEngine`.
 
-Synchronous batched generation (all requests share a step clock — the
-decode-shape contract of the dry-run). Supports greedy and temperature
-sampling; KV/SSM caches come from the model's ``init_cache``/``prefill``.
+:class:`ReferenceEngine` is the original host-side loop — one jitted decode
+dispatch (plus a sample) per token, every request barriered on the longest
+sequence, exactly one adapter. It is kept verbatim as the equivalence oracle
+and benchmark baseline.
+
+:class:`ServeEngine` is the production path:
+
+* **Jitted decode loop** — the whole decode runs inside one ``jax.jit`` as a
+  ``lax.while_loop`` (sampling, EOS bookkeeping, and cache updates in-graph),
+  so decode never round-trips to Python per token. The batch path
+  (:meth:`generate`) replays the reference loop's exact semantics — chained
+  ``fold_in`` key, full-batch sampling, raw (unpinned) token fed back,
+  EOS pinning at record time — and is bit-identical to it.
+* **Continuous batching** — requests enter via :meth:`submit`; a
+  :class:`~repro.serve.scheduler.SlotScheduler` admits queued requests into
+  freed cache slots between jitted *segments* (:meth:`step`). Per-slot
+  position/done/budget/key vectors ride inside the segment's while_loop; a
+  segment stops early only when a slot frees up AND the queue is non-empty.
+* **Multi-adapter routing** — each request names an adapter from the
+  engine's registry (``adapters``); slots gather their adapter's LoRA out of
+  a stacked tree (:func:`repro.lora.gather_adapter_slots`) so one decode
+  step serves every tenant (per-row batched apply in ``models.layers.linear``).
 """
 from __future__ import annotations
 
 import dataclasses
+import itertools
+import time
 from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.lora import gather_adapter_slots, stack_adapter_trees
 from repro.models.model_api import ModelFns
+from repro.serve.requests import (
+    Completion,
+    Request,
+    SamplingParams,
+    batch_from_requests,
+    requests_from_batch,
+)
+from repro.serve.scheduler import SlotScheduler
 
 
 @dataclasses.dataclass
@@ -22,7 +53,11 @@ class GenerationResult:
     steps: int
 
 
-class ServeEngine:
+class ReferenceEngine:
+    """The seed synchronous engine (host-side decode loop), kept as the
+    bit-exactness oracle for :meth:`ServeEngine.generate` and the baseline
+    for ``benchmarks/serve_bench.py``. Do not optimize."""
+
     def __init__(self, model: ModelFns, params, lora, *, cache_len: int = 1024):
         self.model = model
         self.params = params
@@ -73,3 +108,441 @@ class ServeEngine:
             pos = pos + 1
             steps = i + 1
         return GenerationResult(tokens=out, steps=steps)
+
+
+class ServeEngine:
+    """Jitted continuous-batching engine over any decode-capable ModelFns.
+
+    Two surfaces:
+
+    * :meth:`generate(batch, ...)` — the legacy blocking call, now a thin
+      batch-of-requests wrapper over :class:`Request`; runs the fully jitted
+      batch loop and reproduces :class:`ReferenceEngine` outputs bit-for-bit
+      (same chained key, same sampling, same EOS pinning).
+    * :meth:`submit` / :meth:`step` / :meth:`drain` — continuous batching:
+      ``submit`` enqueues a Request, ``step`` admits queued requests into
+      free slots (one batched prefill per shape group) then runs one jitted
+      decode segment and returns finished :class:`Completion`\\ s, ``drain``
+      steps until idle. Requests route to per-request adapters
+      (``adapter_id`` indexes ``[lora, *adapters]``).
+
+    ``max_new_cap`` bounds per-request ``max_new_tokens`` (it sizes the
+    per-slot output buffer). Budgets are additionally clamped to the cache
+    capacity ``cache_len - prompt_len`` for cached-attention families.
+    """
+
+    def __init__(
+        self,
+        model: ModelFns,
+        params,
+        lora,
+        *,
+        cache_len: int = 1024,
+        num_slots: int = 8,
+        adapters: Optional[List[Any]] = None,
+        max_new_cap: int = 128,
+    ):
+        self.model = model
+        self.params = params
+        self.lora = lora
+        self.cache_len = cache_len
+        self.num_slots = num_slots
+        self.max_new_cap = max_new_cap
+        self.adapters = [lora] + list(adapters or [])
+        self._single = len(self.adapters) == 1
+        self._stacked = None if self._single else stack_adapter_trees(self.adapters)
+        self._prefill = jax.jit(
+            lambda p, l, batch: model.prefill(p, l, batch, cache_len)
+        )
+        self._batch_loops: Dict[Any, Any] = {}  # (max_new, temperature) -> jit
+        self._segment = self._build_segment()
+        self._admit = jax.jit(self._admit_fn)
+        self._first_token = jax.jit(self._first_token_fn)
+        self.scheduler = SlotScheduler(num_slots)
+        self._state: Optional[Dict[str, Any]] = None
+        self._ttft: Dict[int, float] = {}
+        self._rid = itertools.count()
+        self.stats = {
+            "prefill_calls": 0,
+            "batch_loop_calls": 0,
+            "segment_calls": 0,
+            "jitted_decode_steps": 0,
+            "admitted": 0,
+            "completed": 0,
+        }
+
+    # ------------------------------------------------------------------
+    # batch path (bit-identical to ReferenceEngine)
+    # ------------------------------------------------------------------
+
+    def _sample(self, logits, key, temperature: float):
+        logits = logits[:, -1].astype(jnp.float32)
+        if temperature == 0.0:
+            return jnp.argmax(logits, -1)
+        return jax.random.categorical(key, logits / temperature, -1)
+
+    def _batch_loop(self, max_new: int, temperature: float):
+        """Jitted replay of the reference loop (state carried in-graph).
+
+        Cached per (max_new, temperature): max_new sizes the output buffer,
+        temperature selects argmax vs categorical at trace time — exactly
+        the reference's Python-level branch. EOS rides in as a traced (B,)
+        vector (-1 = no EOS), bitwise-equivalent to the reference's host
+        branches because ``where(False, ...)`` is the identity.
+        """
+        key_ = (max_new, temperature)
+        if key_ in self._batch_loops:
+            return self._batch_loops[key_]
+        model = self.model
+
+        def sample(logits, key):
+            lg = logits[:, -1].astype(jnp.float32)
+            if temperature == 0.0:
+                return jnp.argmax(lg, -1)
+            return jax.random.categorical(key, lg / temperature, -1)
+
+        def run(params, lora, token, key, cache, pos, eos_v):
+            B = token.shape[0]
+
+            def body(s):
+                i = s["i"]
+                tok = s["token"][:, 0]
+                has = eos_v >= 0
+                pinned = jnp.where(s["done"] & has, eos_v, tok)
+                done = s["done"] | (has & (pinned == eos_v))
+                out = jax.lax.dynamic_update_slice_in_dim(
+                    s["out"], pinned[:, None].astype(jnp.int32), i, axis=1
+                )
+                # the reference runs one final wasted decode before its loop
+                # exits; skipping it only drops discarded state
+                more = (i + 1 < max_new) & ~jnp.all(done)
+
+                def dec(args):
+                    token, key, cache, pos = args
+                    logits, cache2 = model.decode_step(params, lora, token, cache, pos)
+                    key2 = jax.random.fold_in(key, i)
+                    token2 = sample(logits, key2)[:, None].astype(jnp.int32)
+                    return token2, key2, cache2, pos + 1
+
+                token2, key2, cache2, pos2 = jax.lax.cond(
+                    more, dec, lambda a: a, (s["token"], s["key"], s["cache"], s["pos"])
+                )
+                return {
+                    "i": i + 1, "token": token2, "done": done, "key": key2,
+                    "cache": cache2, "pos": pos2, "out": out, "steps": i + 1,
+                    "more": more,
+                }
+
+            s0 = {
+                "i": jnp.int32(0), "token": token,
+                "done": jnp.zeros((B,), bool), "key": key, "cache": cache,
+                "pos": pos, "out": jnp.zeros((B, max_new), jnp.int32),
+                "steps": jnp.int32(0), "more": jnp.array(max_new > 0),
+            }
+            s = jax.lax.while_loop(lambda s: s["more"], body, s0)
+            return s["out"], s["steps"]
+
+        jitted = jax.jit(run)
+        self._batch_loops[key_] = jitted
+        return jitted
+
+    def generate(
+        self,
+        batch: Dict[str, Any],
+        *,
+        max_new_tokens: int = 32,
+        temperature: float = 0.0,
+        eos_id: Optional[int] = None,
+        seed: int = 0,
+    ) -> GenerationResult:
+        """Blocking batch call — a thin wrapper building one Request per row
+        and running them as a uniform batch (bit-identical to the seed)."""
+        sp = SamplingParams(
+            max_new_tokens=max_new_tokens, temperature=temperature,
+            eos_id=eos_id, seed=seed,
+        )
+        return self.generate_requests(requests_from_batch(batch, sp))
+
+    def generate_requests(self, reqs: List[Request]) -> GenerationResult:
+        """Run same-shape, same-SamplingParams requests as one jitted batch."""
+        sp = reqs[0].sampling
+        if any(r.sampling != sp for r in reqs):
+            raise ValueError("generate_requests needs uniform SamplingParams")
+        if any(r.adapter_id != 0 for r in reqs):
+            raise ValueError("the batch path serves adapter 0; use submit()")
+        batch = batch_from_requests(reqs)
+        logits, cache, pos = self._prefill(self.params, self.lora, batch)
+        self.stats["prefill_calls"] += 1
+        key = jax.random.PRNGKey(sp.seed)
+        token = self._sample(logits, key, sp.temperature)[:, None].astype(jnp.int32)
+        B = logits.shape[0]
+        eos_v = jnp.full((B,), -1 if sp.eos_id is None else sp.eos_id, jnp.int32)
+        run = self._batch_loop(sp.max_new_tokens, sp.temperature)
+        out, steps = run(self.params, self.lora, token, key, cache, pos, eos_v)
+        self.stats["batch_loop_calls"] += 1
+        return GenerationResult(tokens=np.asarray(out), steps=int(steps))
+
+    # ------------------------------------------------------------------
+    # continuous batching: submit / step / drain
+    # ------------------------------------------------------------------
+
+    def submit(self, req: Request) -> int:
+        """Enqueue a request; returns its request_id."""
+        if not (0 <= req.adapter_id < len(self.adapters)):
+            raise ValueError(
+                f"adapter_id {req.adapter_id} outside registry "
+                f"[0, {len(self.adapters)})"
+            )
+        if req.request_id is None:
+            req.request_id = next(self._rid)
+        req.submit_time = time.perf_counter()
+        self.scheduler.enqueue(req)
+        return req.request_id
+
+    def step(self) -> List[Completion]:
+        """Admit queued requests into free slots, run one jitted decode
+        segment, retire finished slots. Returns completions (maybe [])."""
+        for slots, reqs in self.scheduler.admissions():
+            self._admit_group(slots, reqs)
+        if self._state is None or not bool(np.any(np.asarray(self._state["active"]))):
+            return []
+        stop_on_free = jnp.array(self.scheduler.queued > 0)
+        lora_src = self.lora if self._single else self._stacked
+        self._state, nsteps = self._segment(
+            self.params, lora_src, self._state, stop_on_free
+        )
+        self.stats["segment_calls"] += 1
+        self.stats["jitted_decode_steps"] += int(nsteps)
+        return self._retire()
+
+    def drain(self) -> List[Completion]:
+        """Step until every queued and resident request has completed."""
+        comps: List[Completion] = []
+        while self.scheduler.queued or self.scheduler.active:
+            comps.extend(self.step())
+        return comps
+
+    def reset(self) -> None:
+        """Drop all slot state and queued work; keep compiled functions."""
+        self.scheduler = SlotScheduler(self.num_slots)
+        self._state = None
+        self._ttft = {}
+        self.stats = {k: 0 for k in self.stats}
+
+    # -- internals ------------------------------------------------------
+
+    def _first_token_fn(self, logits, keys, temps):
+        """Per-row first-token sample from prefill logits."""
+        lg = logits[:, -1].astype(jnp.float32)
+        greedy = jnp.argmax(lg, -1)
+        tsafe = jnp.maximum(temps, 1e-6)
+        stoch = jax.vmap(jax.random.categorical)(keys, lg / tsafe[:, None])
+        return jnp.where(temps > 0.0, stoch, greedy).astype(jnp.int32)
+
+    def _ensure_state(self, cache_template) -> None:
+        if self._state is not None:
+            return
+        B, W = self.num_slots, self.max_new_cap
+        # every cache leaf in every family carries the batch on axis 1
+        cache = jax.tree.map(
+            lambda c: jnp.zeros(c.shape[:1] + (B,) + c.shape[2:], c.dtype),
+            cache_template,
+        )
+        self._state = {
+            "token": jnp.zeros((B, 1), jnp.int32),
+            "pos": jnp.zeros((B,), jnp.int32),
+            "done": jnp.zeros((B,), bool),
+            "active": jnp.zeros((B,), bool),
+            "emitted": jnp.zeros((B,), jnp.int32),
+            "budget": jnp.zeros((B,), jnp.int32),
+            "eos": jnp.full((B,), -1, jnp.int32),
+            "temp": jnp.zeros((B,), jnp.float32),
+            "keys": jnp.zeros((B, 2), jnp.uint32),
+            "out": jnp.zeros((B, W), jnp.int32),
+            "aidx": jnp.zeros((B,), jnp.int32),
+            "cache": cache,
+        }
+
+    @staticmethod
+    def _admit_fn(state, slots, cache_g, tok0, pos0, keys0, eos0, temp0, bud0, aidx0):
+        st = dict(state)
+        st["cache"] = jax.tree.map(
+            lambda c, n: c.at[:, slots].set(n.astype(c.dtype)),
+            state["cache"], cache_g,
+        )
+        st["token"] = state["token"].at[slots].set(tok0[:, None])
+        st["pos"] = state["pos"].at[slots].set(pos0)
+        st["done"] = state["done"].at[slots].set(False)
+        st["active"] = state["active"].at[slots].set(True)
+        st["emitted"] = state["emitted"].at[slots].set(0)
+        st["budget"] = state["budget"].at[slots].set(bud0)
+        st["eos"] = state["eos"].at[slots].set(eos0)
+        st["temp"] = state["temp"].at[slots].set(temp0)
+        st["keys"] = state["keys"].at[slots].set(keys0)
+        st["out"] = state["out"].at[slots].set(0)
+        st["aidx"] = state["aidx"].at[slots].set(aidx0)
+        return st
+
+    def _admit_group(self, slots: List[int], reqs: List[Request]) -> None:
+        cfg = self.model.cfg
+        batch = batch_from_requests(reqs)
+        ids = jnp.asarray([r.adapter_id for r in reqs], jnp.int32)
+        lora_g = (
+            self.lora
+            if self._single
+            else gather_adapter_slots(cfg, self._stacked, ids)
+        )
+        logits, cache_g, pos_s = self._prefill(self.params, lora_g, batch)
+        self.stats["prefill_calls"] += 1
+        keys0 = jax.vmap(jax.random.PRNGKey)(
+            jnp.asarray([r.sampling.seed for r in reqs], jnp.int32)
+        )
+        temps = jnp.asarray([r.sampling.temperature for r in reqs], jnp.float32)
+        tok0 = self._first_token(logits, keys0, temps)
+        tok0.block_until_ready()  # first token exists now: the TTFT point
+        now = time.perf_counter()
+        for r in reqs:
+            self._ttft[r.request_id] = now - (r.submit_time or now)
+        g = len(reqs)
+        S = int(pos_s)
+        budgets = []
+        for r in reqs:
+            b = min(r.sampling.max_new_tokens, self.max_new_cap)
+            if cfg.family != "ssm":  # cached-attention families: T-bounded
+                b = min(b, self.cache_len - S)
+            budgets.append(max(b, 0))
+        self._ensure_state(cache_g)
+        self._state = self._admit(
+            self._state,
+            jnp.asarray(slots, jnp.int32),
+            cache_g,
+            tok0,
+            jnp.full((g,), S, jnp.int32),
+            keys0,
+            jnp.asarray(
+                [-1 if r.sampling.eos_id is None else r.sampling.eos_id for r in reqs],
+                jnp.int32,
+            ),
+            temps,
+            jnp.asarray(budgets, jnp.int32),
+            ids,
+        )
+        self.stats["admitted"] += g
+
+    def _build_segment(self):
+        model = self.model
+        cfg = model.cfg
+        single = self._single
+
+        def seg(params, lora_src, state, stop_on_free):
+            # gather each slot's adapter once per segment; with a single
+            # registered adapter the plain (unbatched) tree is shared by all
+            # slots and the decode matches the batch path exactly
+            lora_t = (
+                lora_src if single
+                else gather_adapter_slots(cfg, lora_src, state["aidx"])
+            )
+            B = state["token"].shape[0]
+            W = state["out"].shape[1]
+            rows = jnp.arange(B)
+
+            def body(c):
+                st = c["st"]
+                tok = st["token"][:, 0]
+                has = st["eos"] >= 0
+                # record the pending token for rows that still owe output
+                rec = st["active"] & ~st["done"] & (st["emitted"] < st["budget"])
+                cols = jnp.clip(st["emitted"], 0, W - 1)
+                out = st["out"].at[rows, cols].set(
+                    jnp.where(rec, tok, st["out"][rows, cols])
+                )
+                done = st["done"] | (rec & has & (tok == st["eos"]))
+                emitted = st["emitted"] + rec.astype(jnp.int32)
+                lv = st["active"] & ~done & (emitted < st["budget"])
+                fin = c["fin"] | jnp.any(st["active"] & ~lv)
+                # live rows must always decode their next pending token —
+                # even on the iteration that ends the segment — or the next
+                # segment would re-record the stale one. The segment itself
+                # only stops early when a slot just freed AND the queue has
+                # work waiting for it.
+                do_dec = jnp.any(lv)
+                more = do_dec & ~(stop_on_free & fin)
+
+                def dec(args):
+                    token, keys, cache, pos = args
+                    logits, cache2 = model.decode_step(
+                        params, lora_t, token, cache, pos
+                    )
+                    # per-row chained keys: token #j uses fold_in(key_{j-1},
+                    # j-1), a function of the request alone — co-residents
+                    # can never perturb a request's sample stream
+                    folded = jax.vmap(jax.random.fold_in)(
+                        keys, jnp.maximum(emitted - 1, 0)
+                    )
+                    lg = logits[:, -1].astype(jnp.float32)
+                    greedy = jnp.argmax(lg, -1)
+                    tsafe = jnp.maximum(st["temp"], 1e-6)
+                    stoch = jax.vmap(jax.random.categorical)(
+                        folded, lg / tsafe[:, None]
+                    )
+                    tok2 = jnp.where(st["temp"] > 0.0, stoch, greedy).astype(jnp.int32)
+                    token2 = jnp.where(lv[:, None], tok2[:, None], token)
+                    keys2 = jnp.where(lv[:, None], folded, keys)
+                    pos2 = pos + lv.astype(jnp.int32)
+                    return token2, keys2, cache2, pos2
+
+                token2, keys2, cache2, pos2 = jax.lax.cond(
+                    do_dec, dec, lambda a: a,
+                    (st["token"], st["keys"], st["cache"], st["pos"]),
+                )
+                nst = dict(st)
+                nst.update(
+                    token=token2, keys=keys2, cache=cache2, pos=pos2,
+                    out=out, done=done, emitted=emitted,
+                )
+                return {
+                    "st": nst, "fin": fin, "more": more,
+                    "nsteps": c["nsteps"] + do_dec.astype(jnp.int32),
+                }
+
+            live0 = jnp.any(
+                state["active"] & ~state["done"] & (state["emitted"] < state["budget"])
+            )
+            c = jax.lax.while_loop(
+                lambda c: c["more"], body,
+                {"st": state, "fin": jnp.array(False), "more": live0,
+                 "nsteps": jnp.int32(0)},
+            )
+            return c["st"], c["nsteps"]
+
+        return jax.jit(seg)
+
+    def _retire(self) -> List[Completion]:
+        st = self._state
+        active = np.asarray(st["active"])
+        done = np.asarray(st["done"])
+        emitted = np.asarray(st["emitted"])
+        budget = np.asarray(st["budget"])
+        fin_slots = np.flatnonzero(active & (done | (emitted >= budget)))
+        if fin_slots.size == 0:
+            return []
+        out = np.asarray(st["out"])
+        comps = []
+        for slot in fin_slots:
+            slot = int(slot)
+            req = self.scheduler.release(slot)
+            n = int(emitted[slot])
+            comps.append(
+                Completion(
+                    request_id=req.request_id,
+                    tokens=out[slot, :n].copy(),
+                    prompt_len=int(np.asarray(req.tokens).shape[-1]),
+                    adapter_id=req.adapter_id,
+                    finish_reason="eos" if done[slot] else "length",
+                    steps=n,
+                    ttft_s=self._ttft.pop(req.request_id, None),
+                )
+            )
+        st["active"] = st["active"].at[jnp.asarray(fin_slots)].set(False)
+        self.stats["completed"] += len(comps)
+        return comps

@@ -1,0 +1,103 @@
+"""Request-oriented serving surface: dataclasses + batch <-> request helpers.
+
+The engine's unit of work is a :class:`Request` (one prompt, its
+:class:`SamplingParams`, and an adapter id into the engine's registry); the
+unit of output is a :class:`Completion`. ``ServeEngine.generate`` remains a
+thin batch-of-requests wrapper over these types.
+
+:func:`make_prompt_batch` is the one place that knows which extra inputs each
+family's prefill needs (vlm ``prefix_embeds``, encdec/audio
+``encoder_embeds``) — shared by ``examples/serve_batch.py``,
+``launch/serve.py``, and the serve benchmark instead of each copy-pasting the
+family conditionals.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    max_new_tokens: int = 32
+    temperature: float = 0.0
+    eos_id: Optional[int] = None
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class Request:
+    """One prompt. ``tokens``: (S,) int; ``extras``: per-row family inputs
+    (e.g. a (num_prefix, d_model) ``prefix_embeds`` row). ``request_id`` and
+    ``submit_time`` are stamped by ``ServeEngine.submit``."""
+
+    tokens: np.ndarray
+    sampling: SamplingParams = dataclasses.field(default_factory=SamplingParams)
+    adapter_id: int = 0
+    extras: Optional[Dict[str, np.ndarray]] = None
+    request_id: Optional[int] = None
+    submit_time: Optional[float] = None
+
+
+@dataclasses.dataclass
+class Completion:
+    request_id: Optional[int]
+    tokens: np.ndarray  # (n,) int32 — generated tokens, ending at EOS if hit
+    prompt_len: int
+    adapter_id: int
+    finish_reason: str  # "eos" | "length"
+    steps: int  # == len(tokens)
+    ttft_s: Optional[float]  # submit -> first token, None if untimed
+
+
+def make_prompt_batch(
+    cfg: ModelConfig, rng: jax.Array, batch_size: int, prompt_len: int
+) -> Dict[str, Any]:
+    """Random prompt batch with every extra input ``cfg``'s prefill needs."""
+    batch: Dict[str, Any] = {
+        "tokens": jax.random.randint(rng, (batch_size, prompt_len), 0, cfg.vocab_size)
+    }
+    if cfg.family == "vlm":
+        batch["prefix_embeds"] = jnp.zeros(
+            (batch_size, cfg.num_prefix_embeddings, cfg.d_model), cfg.dtype
+        )
+    if cfg.family in ("encdec", "audio"):
+        batch["encoder_embeds"] = jnp.zeros(
+            (batch_size, cfg.encoder_seq_len, cfg.d_model), cfg.dtype
+        )
+    return batch
+
+
+def requests_from_batch(
+    batch: Dict[str, Any],
+    sampling: Optional[SamplingParams] = None,
+    adapter_ids=None,
+) -> List[Request]:
+    """Split a row-stacked batch dict into per-row Requests (exact values)."""
+    tokens = np.asarray(batch["tokens"])
+    extra_keys = [k for k in batch if k != "tokens"]
+    extras_np = {k: np.asarray(batch[k]) for k in extra_keys}
+    sampling = sampling or SamplingParams()
+    reqs = []
+    for i in range(tokens.shape[0]):
+        extras = {k: extras_np[k][i] for k in extra_keys} or None
+        aid = int(adapter_ids[i]) if adapter_ids is not None else 0
+        reqs.append(
+            Request(tokens=tokens[i], sampling=sampling, adapter_id=aid, extras=extras)
+        )
+    return reqs
+
+
+def batch_from_requests(reqs: List[Request]) -> Dict[str, Any]:
+    """Stack same-shape Requests back into a batch dict (exact values)."""
+    batch = {"tokens": jnp.asarray(np.stack([np.asarray(r.tokens) for r in reqs]))}
+    if reqs[0].extras:
+        for k in reqs[0].extras:
+            batch[k] = jnp.asarray(np.stack([np.asarray(r.extras[k]) for r in reqs]))
+    return batch

@@ -161,6 +161,74 @@ def test_sparse_lora_masked_columns_zero(rng):
     assert float(jnp.max(jnp.abs(y[:, 64:]))) == 0.0  # frozen neurons: no delta
 
 
+@pytest.mark.parametrize(
+    "M,K,N,r,A",
+    [
+        (128, 512, 128, 8, 1),  # tile-exact, single adapter ≡ unbatched
+        (128, 512, 128, 4, 4),  # tile-exact, multi-adapter
+        (64, 96, 80, 4, 3),  # every dim off-tile
+        (200, 1024, 250, 16, 2),  # mixed off-tile, multi-k-step
+    ],
+)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_batched_sparse_lora(rng, M, K, N, r, A, dtype):
+    x = jax.random.normal(rng, (M, K), dtype)
+    idx = jax.random.randint(jax.random.fold_in(rng, 1), (M,), 0, A, jnp.int32)
+    a = jax.random.normal(jax.random.fold_in(rng, 2), (A, K, r), jnp.float32)
+    b = jax.random.normal(jax.random.fold_in(rng, 3), (A, r, N), jnp.float32)
+    # per-adapter keep ratios sweep ρ: adapter i keeps ~ (i+1)/(A+1) of columns
+    u = jax.random.uniform(jax.random.fold_in(rng, 4), (A, N))
+    mask = (u < (jnp.arange(1, A + 1, dtype=jnp.float32)[:, None] / (A + 1))).astype(
+        jnp.float32
+    )
+    y = ops.batched_sparse_lora_apply(x, idx, a, b, mask, 2.0)
+    ye = ref.batched_sparse_lora_matmul_ref(x, idx, a, b, mask, 2.0)
+    tol = 1e-3 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(
+        np.asarray(y, np.float32), np.asarray(ye, np.float32), rtol=tol, atol=tol
+    )
+    if A == 1:
+        ys = ref.sparse_lora_matmul_ref(x, a[0], b[0], mask[0], 2.0)
+        np.testing.assert_allclose(
+            np.asarray(y, np.float32), np.asarray(ys, np.float32), rtol=tol, atol=tol
+        )
+
+
+def test_batched_sparse_lora_leading_dims(rng):
+    # (B, S, K) activations with a (B, S) per-row index, as used in serving
+    B, S, K, N, r, A = 2, 32, 96, 80, 4, 3
+    x = jax.random.normal(rng, (B, S, K))
+    idx = jnp.broadcast_to(jnp.array([0, 2], jnp.int32)[:, None], (B, S))
+    a = jax.random.normal(jax.random.fold_in(rng, 1), (A, K, r))
+    b = jax.random.normal(jax.random.fold_in(rng, 2), (A, r, N))
+    mask = jnp.ones((A, N))
+    y = ops.batched_sparse_lora_apply(x, idx, a, b, mask)
+    ye = ref.batched_sparse_lora_matmul_ref(
+        x.reshape(-1, K), idx.reshape(-1), a, b, mask
+    ).reshape(B, S, N)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ye), rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("M,K,N,r", [(128, 512, 256, 8), (64, 96, 200, 4)])
+@pytest.mark.parametrize("rho", [0.0, 0.25, 0.5])
+def test_sparse_lora_packed(rng, M, K, N, r, rho):
+    x = jax.random.normal(rng, (M, K))
+    a = jax.random.normal(jax.random.fold_in(rng, 1), (K, r))
+    b = jax.random.normal(jax.random.fold_in(rng, 2), (r, N))
+    keep = int(round(rho * N))
+    perm = jax.random.permutation(jax.random.fold_in(rng, 3), N)
+    mask = jnp.zeros((N,)).at[perm[:keep]].set(1.0)
+    y = ops.sparse_lora_apply_packed(x, a, b, mask, 2.0)
+    ye = ref.sparse_lora_matmul_ref(x, a, b, mask, 2.0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ye), rtol=1e-3, atol=1e-3)
+    # the packed path's matmul only ever sees the kept columns
+    if keep:
+        yp = ref.sparse_lora_matmul_packed_ref(x, a, b[:, perm[:keep]], 2.0)
+        np.testing.assert_allclose(
+            np.asarray(y[:, perm[:keep]]), np.asarray(yp), rtol=1e-3, atol=1e-3
+        )
+
+
 @pytest.mark.parametrize("S,H,KVH,D", [(128, 4, 4, 64), (256, 4, 2, 64), (256, 8, 1, 128)])
 @pytest.mark.parametrize("window", [None, 128])
 def test_flash_attention(rng, S, H, KVH, D, window):
@@ -225,3 +293,32 @@ def test_ssd_chunk_matches_model_path(rng):
     np.testing.assert_allclose(
         np.asarray(y_model), np.asarray(y_kernel), rtol=1e-4, atol=1e-4
     )
+
+
+# ---------------------------------------------------------------------------
+# platform-aware interpret default
+# ---------------------------------------------------------------------------
+
+
+def test_resolve_interpret(monkeypatch):
+    """Explicit flag > REPRO_PALLAS_INTERPRET env > platform default.
+
+    The seed hardcoded ``interpret: bool = True`` — silently running the
+    interpreter on real TPUs; the resolved default must only interpret off-TPU.
+    """
+    from repro.kernels.sparse_lora import resolve_interpret
+
+    monkeypatch.delenv("REPRO_PALLAS_INTERPRET", raising=False)
+    # explicit always wins
+    assert resolve_interpret(True) is True
+    assert resolve_interpret(False) is False
+    # platform default: this suite runs on CPU, so interpret
+    assert jax.default_backend() != "tpu"
+    assert resolve_interpret(None) is True
+    # env override
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "0")
+    assert resolve_interpret(None) is False
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
+    assert resolve_interpret(None) is True
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "0")
+    assert resolve_interpret(True) is True  # explicit still wins over env

@@ -141,3 +141,31 @@ def test_serve_engine_pins_finished_rows_to_eos(rng):
             )
             # ... then pinned at EOS, never post-EOS samples
             assert (res.tokens[b][first + 1 : res.steps] == eos).all()
+
+
+def test_generate_bit_identical_to_reference(rng):
+    """The jitted batch loop must reproduce the seed host-side loop
+    bit-for-bit — same chained fold_in key, same sampling, same EOS
+    pinning — across greedy, stochastic, and EOS-terminated decodes."""
+    from repro.configs import ARCHS
+    from repro.models import build_model
+    from repro.serve import ReferenceEngine, ServeEngine
+
+    cfg = ARCHS["qwen2-0.5b"].reduced()
+    model = build_model(cfg)
+    params = model.init_params(rng)
+    lora = model.init_lora(rng)
+    ref = ReferenceEngine(model, params, lora, cache_len=64)
+    eng = ServeEngine(model, params, lora, cache_len=64)
+    batch = {"tokens": jax.random.randint(rng, (3, 8), 0, cfg.vocab_size)}
+
+    free = ref.generate(batch, max_new_tokens=6)
+    for kw in (
+        {},  # greedy
+        {"temperature": 0.7, "seed": 3},  # stochastic, chained fold_in key
+        {"eos_id": int(free.tokens[0, 1])},  # pinning + early stop
+    ):
+        r = ref.generate(batch, max_new_tokens=6, **kw)
+        s = eng.generate(batch, max_new_tokens=6, **kw)
+        np.testing.assert_array_equal(r.tokens, s.tokens)
+        assert r.steps == s.steps
