@@ -49,6 +49,10 @@ Usage:  PYTHONPATH=src python benchmarks/async_bench.py
                              benchmarks/baselines/async.json)
         [--min-speedup X]   (non-zero exit if any scenario's async-over-sync
                              virtual-time speedup < X)
+        [--trace-dir DIR]   (extra telemetry-enabled adaptive pass on the
+                             first scenario; writes DIR/trace.jsonl and a
+                             Perfetto-loadable DIR/trace.json — inspect with
+                             scripts/trace_summary.py)
 
 Env: REPRO_BENCH_DEVICES (default 16) clients, half sampled per round.
      REPRO_BENCH_HOST_DEVICES forces that many XLA host devices (set before
@@ -167,7 +171,7 @@ def adaptive_cfg(k: int) -> AsyncAggConfig:
 
 def run_async(
     preset, *, target: float, max_rounds: int, max_merges: int, seed: int,
-    async_cfg: AsyncAggConfig,
+    async_cfg: AsyncAggConfig, telemetry=None,
 ) -> dict:
     """Async merges until the smoothed loss reaches ``target`` (or cap).
 
@@ -181,7 +185,7 @@ def run_async(
     runner = make_runner(
         "fibecfed", model, make_loss_fn(model), fl, client_data,
         seed=seed, optimizer="sgd", engine="async", scenario=preset,
-        async_cfg=async_cfg,
+        async_cfg=async_cfg, telemetry=telemetry,
     )
     runner.init_phase()
     times, losses = [], []
@@ -307,13 +311,47 @@ def bench_all(scenarios, *, max_rounds: int) -> tuple:
     return rows, speedups, di_speedups, results
 
 
-def write_json(path: str, speedups: dict, di_speedups: dict, results: dict) -> None:
+def export_trace(trace_dir: str, *, scenario: str, target: float,
+                 max_rounds: int, seed: int = 0) -> dict:
+    """One extra telemetry-enabled adaptive run under ``scenario``; writes
+    ``trace.jsonl`` (schema-validated event log + metrics snapshot) and a
+    Perfetto-loadable ``trace.json`` into ``trace_dir``. The gated timing
+    runs above stay un-instrumented; this run exists to produce the
+    artifact. Returns the telemetry metrics snapshot."""
+    from repro.obs import Telemetry, validate_jsonl
+
+    os.makedirs(trace_dir, exist_ok=True)
+    k = fl_config(max_rounds).devices_per_round
+    tel = Telemetry(
+        run_id=f"async_bench/{scenario}",
+        meta={"scenario": scenario, "fl_devices": DEVICES,
+              "max_rounds": max_rounds, "target_loss": target},
+    )
+    run_async(
+        get_scenario(scenario), target=target, max_rounds=max_rounds,
+        max_merges=6 * max_rounds, seed=seed, async_cfg=adaptive_cfg(k),
+        telemetry=tel,
+    )
+    jsonl = os.path.join(trace_dir, "trace.jsonl")
+    tel.export_jsonl(jsonl)
+    validate_jsonl(jsonl)
+    tel.export_perfetto(os.path.join(trace_dir, "trace.json"))
+    print(f"# wrote {trace_dir}/trace.jsonl + trace.json", file=sys.stderr)
+    return tel.snapshot()
+
+
+def write_json(path: str, speedups: dict, di_speedups: dict, results: dict,
+               metrics_snapshot: dict = None) -> None:
     """BENCH_async.json — compared against benchmarks/baselines/async.json
     by scripts/bench_compare.py (speedup ratios transfer across machines;
     virtual times are machine-independent by construction; the
     ``speedups_device_independent`` block — bytes-to-target ratios — always
-    gates, even across machines with different device counts)."""
+    gates, even across machines with different device counts). The
+    ``metrics_snapshot`` block is informational — bench_compare passes it
+    through without gating."""
     import jax
+
+    from repro.obs import runtime_metrics
 
     payload = {
         "bench": "async",
@@ -323,6 +361,11 @@ def write_json(path: str, speedups: dict, di_speedups: dict, results: dict) -> N
         "scenarios": results,
         "speedups": speedups,
         "speedups_device_independent": di_speedups,
+        "metrics_snapshot": (
+            metrics_snapshot
+            if metrics_snapshot is not None
+            else {"runtime": runtime_metrics.snapshot()}
+        ),
     }
     with open(path, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)
@@ -341,8 +384,15 @@ def _main(args) -> int:
     )
     for row in rows:
         print(row)
+    snap = None
+    if args.trace_dir:
+        first = scenarios[0]
+        snap = export_trace(
+            args.trace_dir, scenario=first,
+            target=results[first]["target_loss"], max_rounds=args.max_rounds,
+        )
     if args.json:
-        write_json(args.json, speedups, di_speedups, results)
+        write_json(args.json, speedups, di_speedups, results, snap)
         print(f"# wrote {args.json}", file=sys.stderr)
     worst = min(speedups.values())
     if worst < args.min_speedup:
@@ -368,6 +418,11 @@ if __name__ == "__main__":
     ap.add_argument(
         "--min-speedup", type=float, default=0.0,
         help="exit non-zero unless every scenario's virtual speedup >= this",
+    )
+    ap.add_argument(
+        "--trace-dir", default=None, metavar="DIR",
+        help="run one extra telemetry-enabled adaptive pass on the first"
+             " scenario and write trace.jsonl + Perfetto trace.json there",
     )
     args = ap.parse_args()
     sys.exit(_main(args))

@@ -145,6 +145,8 @@ def write_json(path: str, speedups: dict, results: dict) -> None:
     bench_compare.py checks against a committed baseline."""
     import jax
 
+    from repro.obs import runtime_metrics
+
     payload = {
         "bench": "fl_round",
         "num_xla_devices": len(jax.devices()),
@@ -152,6 +154,9 @@ def write_json(path: str, speedups: dict, results: dict) -> None:
         "batch_size": BATCH_SIZE,
         "engines": results,
         "speedups": speedups,
+        # jit program-build counters across the whole bench (informational;
+        # bench_compare passes the block through without gating)
+        "metrics_snapshot": {"runtime": runtime_metrics.snapshot()},
     }
     with open(path, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)

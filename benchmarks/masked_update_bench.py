@@ -169,6 +169,8 @@ def bench_all(iters: int = 20) -> tuple:
 
 
 def write_json(path: str, speedups: dict, indep: dict, results: dict) -> None:
+    from repro.obs import runtime_metrics
+
     payload = {
         "bench": "masked_update",
         "num_xla_devices": len(jax.devices()),
@@ -179,6 +181,8 @@ def write_json(path: str, speedups: dict, indep: dict, results: dict) -> None:
         "optimizers": results,
         "speedups": speedups,
         "speedups_device_independent": indep,
+        # informational; bench_compare passes the block through without gating
+        "metrics_snapshot": {"runtime": runtime_metrics.snapshot()},
     }
     with open(path, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)

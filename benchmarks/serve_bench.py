@@ -157,7 +157,9 @@ def run_continuous(engine, reqs):
     return wall, ttfts, tokens, dict(engine.stats)
 
 
-def bench_all():
+def bench_all(trace_dir=None):
+    from repro.obs import Telemetry, validate_jsonl
+
     model = build_model(SERVE_LM)
     rng = jax.random.PRNGKey(7)
     params = model.init_params(rng)
@@ -168,9 +170,19 @@ def bench_all():
     useful = sum(r.sampling.max_new_tokens for r in reqs)
 
     ref = ReferenceEngine(model, params, adapters[0], cache_len=CACHE_LEN)
+    # the continuous engine runs with telemetry ENABLED: the timed pass below
+    # doubles as the overhead budget check (spans/counters must stay well
+    # under the gate's noise floor) and the token-equality assert proves the
+    # instrumented path is bit-identical to the un-instrumented reference
+    tel = Telemetry(
+        run_id="serve_bench",
+        meta={"requests": NUM_REQUESTS, "adapters": NUM_ADAPTERS,
+              "num_slots": NUM_SLOTS},
+    )
     cont = ServeEngine(
         model, params, adapters[0], adapters=adapters[1:],
         cache_len=CACHE_LEN, num_slots=NUM_SLOTS, max_new_cap=max(MAX_NEW),
+        telemetry=tel,
     )
 
     # warmup (compile both paths), and check the engines agree token-for-token
@@ -225,10 +237,18 @@ def bench_all():
         f"tok_per_s={useful / cont_s:.0f};dispatches={cont_disp};"
         f"speedup={ref_s / cont_s:.2f}x",
     ]
-    return rows, speedups, indep, results
+    if trace_dir:
+        os.makedirs(trace_dir, exist_ok=True)
+        jsonl = os.path.join(trace_dir, "trace.jsonl")
+        tel.export_jsonl(jsonl)
+        validate_jsonl(jsonl)
+        tel.export_perfetto(os.path.join(trace_dir, "trace.json"))
+        print(f"# wrote {trace_dir}/trace.jsonl + trace.json", file=sys.stderr)
+    return rows, speedups, indep, results, tel.snapshot()
 
 
-def write_json(path: str, speedups: dict, indep: dict, results: dict) -> None:
+def write_json(path: str, speedups: dict, indep: dict, results: dict,
+               metrics_snapshot: dict = None) -> None:
     payload = {
         "bench": "serve",
         "num_xla_devices": len(jax.devices()),
@@ -247,6 +267,8 @@ def write_json(path: str, speedups: dict, indep: dict, results: dict) -> None:
         "engine_metrics": results,
         "speedups": speedups,
         "speedups_device_independent": indep,
+        # informational; bench_compare passes it through without gating
+        "metrics_snapshot": metrics_snapshot or {},
     }
     with open(path, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)
@@ -264,10 +286,15 @@ if __name__ == "__main__":
         "--json", default=None, metavar="PATH",
         help="write machine-readable results (e.g. BENCH_serve.json)",
     )
+    ap.add_argument(
+        "--trace-dir", default=None, metavar="DIR",
+        help="write the continuous engine's trace.jsonl + Perfetto"
+             " trace.json there (inspect with scripts/trace_summary.py)",
+    )
     args = ap.parse_args()
-    rows, speedups, indep, results = bench_all()
+    rows, speedups, indep, results, snap = bench_all(trace_dir=args.trace_dir)
     for row in rows:
         print(row)
     if args.json:
-        write_json(args.json, speedups, indep, results)
+        write_json(args.json, speedups, indep, results, snap)
         print(f"# wrote {args.json}", file=sys.stderr)

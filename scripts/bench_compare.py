@@ -12,6 +12,11 @@ BENCH_masked_update.json`` gates its fused-over-unfused update speedups and
 the (deterministic, machine-independent) lowered-HLO buffer-reduction
 ratios against ``benchmarks/baselines/masked_update.json``.
 
+Bench payloads may carry a ``metrics_snapshot`` block (the ``repro.obs``
+registry/runtime snapshot). It is informational: this script announces its
+presence and passes it through, but never gates on it — observability
+counters are not performance baselines.
+
 Absolute rounds/sec are machine-dependent, so on shared CI runners pass
 ``--warn-only``: every check still runs and prints, but regressions exit 0.
 The speedup ratios are within-run relative measurements and transfer across
@@ -97,6 +102,14 @@ def main(argv=None) -> int:
     except (OSError, json.JSONDecodeError) as e:
         print(f"bench_compare: cannot load inputs: {e}", file=sys.stderr)
         return 2
+
+    for label, payload in (("current", current), ("baseline", baseline)):
+        snap = payload.get("metrics_snapshot")
+        if snap:
+            print(
+                f"bench_compare: {label} carries a metrics_snapshot"
+                f" ({len(snap)} section(s)) — informational, not gated"
+            )
 
     cur_dev = current.get("num_xla_devices")
     base_dev = baseline.get("num_xla_devices")

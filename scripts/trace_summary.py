@@ -1,0 +1,124 @@
+"""Summarize (and validate) a JSONL trace emitted by ``repro.obs``.
+
+Reads the JSONL event log that ``Telemetry.export_jsonl`` writes (one run
+manifest, the span/instant stream, and a final metrics snapshot), validates
+every line against the event schema, and prints a per-(clock, name) span
+breakdown: count, total/mean duration, and summed byte args (any span arg
+ending in ``_bytes`` is treated as a byte payload — e.g. the async engine's
+``upload_bytes`` on upload spans). With ``--metrics`` the embedded metrics
+snapshot is pretty-printed too.
+
+This is the CI gate for trace artifacts: a malformed line, a missing
+manifest, or an empty span stream exits non-zero, so a refactor that breaks
+instrumentation fails the workflow instead of silently uploading garbage.
+
+Usage:
+  PYTHONPATH=src python scripts/trace_summary.py trace.jsonl [--metrics]
+      [--require-spans N]   (exit 1 unless at least N spans are present)
+
+Exit codes: 0 ok, 1 trace loaded but fails a --require-* floor,
+2 unreadable or schema-invalid input.
+
+Only stdlib + ``repro.obs`` (itself stdlib-only) — runs before jax installs.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from collections import defaultdict
+
+
+def load_events(path: str) -> list:
+    events = []
+    with open(path) as f:
+        for i, line in enumerate(f, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                events.append(json.loads(line))
+            except json.JSONDecodeError as e:
+                raise ValueError(f"line {i}: not valid JSON: {e}")
+    return events
+
+
+def span_table(events: list) -> dict:
+    """Aggregate spans by (clock, name): count, total duration, byte sums."""
+    table: dict = defaultdict(
+        lambda: {"count": 0, "total_s": 0.0, "bytes": defaultdict(int)}
+    )
+    for ev in events:
+        if ev.get("type") != "span":
+            continue
+        row = table[(ev["clock"], ev["name"])]
+        row["count"] += 1
+        row["total_s"] += ev["dur"]
+        for k, v in (ev.get("args") or {}).items():
+            if k.endswith("_bytes") and isinstance(v, (int, float)):
+                row["bytes"][k] += v
+    return dict(table)
+
+
+def print_summary(events: list, *, show_metrics: bool) -> None:
+    manifest = events[0]
+    print(f"run_id: {manifest['run_id']}   schema: v{manifest['schema']}")
+    for k, v in sorted((manifest.get("meta") or {}).items()):
+        print(f"  meta.{k}: {v}")
+    table = span_table(events)
+    n_instants = sum(1 for ev in events if ev.get("type") == "instant")
+    print(f"{len(events)} events: {sum(r['count'] for r in table.values())} spans,"
+          f" {n_instants} instants")
+    if table:
+        print(f"\n{'clock':8s} {'span':14s} {'count':>6s} {'total_s':>10s}"
+              f" {'mean_ms':>9s}  bytes")
+        for (clock, name), row in sorted(table.items()):
+            mean_ms = 1e3 * row["total_s"] / row["count"]
+            byte_s = " ".join(
+                f"{k}={v}" for k, v in sorted(row["bytes"].items())
+            )
+            print(f"{clock:8s} {name:14s} {row['count']:6d} {row['total_s']:10.4f}"
+                  f" {mean_ms:9.2f}  {byte_s}")
+    if show_metrics:
+        snap = next(
+            (ev["snapshot"] for ev in events if ev.get("type") == "metrics"), {}
+        )
+        print("\nmetrics snapshot:")
+        print(json.dumps(snap, indent=2, sort_keys=True))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("trace", help="JSONL trace from Telemetry.export_jsonl")
+    ap.add_argument("--metrics", action="store_true",
+                    help="also print the embedded metrics snapshot")
+    ap.add_argument("--require-spans", type=int, default=0, metavar="N",
+                    help="exit 1 unless the trace holds at least N spans")
+    args = ap.parse_args(argv)
+
+    # repro.obs is stdlib-only; import here so --help works without PYTHONPATH
+    from repro.obs import SchemaError, check_spans, validate_jsonl
+
+    try:
+        counts = validate_jsonl(args.trace)
+        events = load_events(args.trace)
+        check_spans(events)  # no partial overlap on any (clock, track)
+    except (OSError, ValueError, SchemaError) as e:
+        print(f"trace_summary: invalid trace: {e}", file=sys.stderr)
+        return 2
+
+    print_summary(events, show_metrics=args.metrics)
+    n_spans = sum(1 for ev in events if ev.get("type") == "span")
+    if n_spans < args.require_spans:
+        print(
+            f"trace_summary: FAIL — {n_spans} spans <"
+            f" --require-spans {args.require_spans}",
+            file=sys.stderr,
+        )
+        return 1
+    print(f"trace_summary: ok ({counts})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

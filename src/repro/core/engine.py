@@ -55,6 +55,21 @@ from repro.launch.mesh import dp_axes
 from repro.train.losses import masked_mean_loss
 
 
+def trace_cache_size(fn: Any) -> int:
+    """Distinct traced signatures resident in a jitted callable's cache.
+
+    The retrace signal behind the ``jit.*_traces`` telemetry gauges: a round
+    program that keeps retracing (e.g. un-bucketed step counts producing a
+    new shape every round) shows up as a growing cache instead of a silent
+    compile stall. Returns 0 for non-jitted callables or if the private
+    accessor disappears — the gauge degrades, nothing breaks.
+    """
+    try:
+        return int(fn._cache_size())
+    except Exception:
+        return 0
+
+
 def _gather(tree, idx):
     return jax.tree.map(lambda x: x[idx], tree)
 

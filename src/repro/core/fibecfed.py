@@ -70,6 +70,8 @@ from repro.data.pipeline import gather_batch, make_batches, stack_clients
 from repro.kernels import ops as kops
 from repro.lora import gal_mask_tree, neuron_mask_tree, rank_mask_tree
 from repro.models.model_api import ModelFns
+from repro.obs import ensure as ensure_telemetry
+from repro.obs import runtime_metrics
 from repro.optim import make_optimizer
 from repro.train.losses import make_logits_loss
 
@@ -86,6 +88,10 @@ _PROGRAM_MEMO: Dict[tuple, Any] = {}
 
 def _memo(key, build):
     if key not in _PROGRAM_MEMO:
+        # a memo miss is a fresh program build (trace + compile on first
+        # call) — the process-wide compile counter observability hangs off
+        # this single choke point
+        runtime_metrics.counter("jit.program_builds").inc()
         _PROGRAM_MEMO[key] = build()
     return _PROGRAM_MEMO[key]
 
@@ -104,6 +110,7 @@ def clear_compile_caches() -> None:
     """
     from repro.train import losses as _losses
 
+    runtime_metrics.counter("jit.cache_clears").inc()
     _PROGRAM_MEMO.clear()
     _losses._LOSS_FN_CACHE.clear()
 
@@ -160,6 +167,7 @@ class FibecFed:
         async_cfg: Optional[Any] = None,
         compression: Optional[Any] = None,
         client_ranks: Optional[Sequence[int]] = None,
+        telemetry: Optional[Any] = None,
         seed: int = 0,
     ):
         """Build an FL runner over host-simulated clients.
@@ -210,6 +218,13 @@ class FibecFed:
             bytes are rank-projected. Defaults to full rank everywhere;
             under ``engine="async"`` a scenario with
             ``slow_rank_fraction < 1`` derives ranks for the slow group.
+          telemetry: an optional ``repro.obs.Telemetry`` — spans every
+            round/init phase on the wall clock (and, under ``engine="async"``,
+            every client completion on the virtual clock), and fills the
+            metrics registry (rounds/sec, per-round loss, comm bytes,
+            staleness, buffer occupancy). ``None`` (the default) installs the
+            no-op recorder: the run is bit-identical to an uninstrumented
+            one (CI-enforced).
           seed: seeds client sampling, GAL randomness, and params/LoRA init;
             the async scenario stream derives from it at a fixed offset so
             heterogeneity never perturbs cohort-sampling equivalence.
@@ -235,6 +250,7 @@ class FibecFed:
         self.gal_mode = gal_mode
         self.sparse_update = sparse_update
         self.engine = engine
+        self.tel = ensure_telemetry(telemetry)
         self.rng = np.random.default_rng(seed)
         self.key = jax.random.PRNGKey(seed)
         self._seed = seed
@@ -781,35 +797,43 @@ class FibecFed:
                 client.ef_residual = jax.tree.map(jnp.zeros_like, self._init_lora)
 
     def init_phase(self, *, probe_batches: int = 1) -> None:
+        with self.tel.span("init_phase", cat="fl", track="server"):
+            self._init_phase_body(probe_batches=probe_batches)
+
+    def _init_phase_body(self, *, probe_batches: int = 1) -> None:
         fl = self.fl
 
         # --- curriculum difficulty (lines 2-5) ---
-        self._compute_difficulty()
+        with self.tel.span("difficulty", cat="fl", track="server"):
+            self._compute_difficulty()
 
         # --- layer sensitivity scores (Eq. 9-10) + lossless fractions ---
-        sensitivity = self._sensitivity_fn()
-        layer_scores_all, fractions, ns = [], [], []
-        for ci, client in enumerate(self.clients):
-            ids = client.batches[int(client.order[0])]
-            batch = self._client_batch(client, ids)
-            scores = sensitivity(self.params, client.lora, batch)
-            client.layer_scores = np.asarray(scores)
-            layer_scores_all.append(client.layer_scores)
-            ns.append(client.n)
+        with self.tel.span("sensitivity", cat="fl", track="server"):
+            sensitivity = self._sensitivity_fn()
+            layer_scores_all, fractions, ns = [], [], []
+            for ci, client in enumerate(self.clients):
+                ids = client.batches[int(client.order[0])]
+                batch = self._client_batch(client, ids)
+                scores = sensitivity(self.params, client.lora, batch)
+                client.layer_scores = np.asarray(scores)
+                layer_scores_all.append(client.layer_scores)
+                ns.append(client.n)
 
-            # --- lossless fraction (only if not overridden; costly) ---
-            if fl.gal_fraction is None or fl.sparse_ratio is None:
-                client.lossless_fraction = galmod.lossless_rank_fraction(
-                    self.loss_fn,
-                    self.params,
-                    client.lora,
-                    batch,
-                    jax.random.fold_in(self.key, 1000 + ci),
-                    iters=fl.lanczos_iters,
+                # --- lossless fraction (only if not overridden; costly) ---
+                if fl.gal_fraction is None or fl.sparse_ratio is None:
+                    client.lossless_fraction = galmod.lossless_rank_fraction(
+                        self.loss_fn,
+                        self.params,
+                        client.lora,
+                        batch,
+                        jax.random.fold_in(self.key, 1000 + ci),
+                        iters=fl.lanczos_iters,
+                    )
+                fractions.append(
+                    client.lossless_fraction
+                    if fl.gal_fraction is None
+                    else fl.gal_fraction
                 )
-            fractions.append(
-                client.lossless_fraction if fl.gal_fraction is None else fl.gal_fraction
-            )
 
         # --- server: GAL selection (lines 6-7) ---
         global_scores = galmod.aggregate_layer_scores(layer_scores_all, ns)
@@ -827,7 +851,8 @@ class FibecFed:
 
         # --- local update parameter selection (lines 8-10) ---
         if self.sparse_update:
-            self._select_local_masks()
+            with self.tel.span("fim_warmup", cat="fl", track="server"):
+                self._select_local_masks()
 
         # --- resource-adaptive rank: fold keep-masks into update masks ---
         if self.client_ranks is not None:
@@ -960,6 +985,44 @@ class FibecFed:
         return y
 
     def run_round(self, t: int, lr: Optional[float] = None) -> Dict[str, float]:
+        if not self.tel.enabled:
+            return self._dispatch_round(t, lr)
+        tel = self.tel
+        start = tel.tracer.now()
+        with tel.span(
+            "round", cat="fl", track="server",
+            args={"t": t, "engine": self.engine},
+        ) as sargs:
+            stats = self._dispatch_round(t, lr)
+            sargs["loss"] = stats.get("loss")
+            sargs["comm_bytes"] = stats.get("comm_bytes")
+        dur = tel.tracer.now() - start
+        m = tel.metrics
+        m.counter("fl.rounds").inc()
+        m.histogram("fl.round_s").observe(dur)
+        if dur > 0.0:
+            m.gauge("fl.rounds_per_s").set(1.0 / dur)
+        loss = stats.get("loss")
+        if loss is not None and not np.isnan(loss):
+            m.histogram("fl.round_loss").observe(loss)
+        if self.comm_bytes_per_round:
+            m.counter("fl.comm_bytes").inc(self.comm_bytes_per_round[-1])
+            m.counter("fl.comm_upload_bytes").inc(
+                self.comm_upload_bytes_per_round[-1]
+            )
+        # retrace visibility: resident traced signatures of this engine's
+        # round-level program (pow2 step bucketing should keep this small)
+        if self._async:
+            m.gauge("jit.client_train_traces").set(
+                eng.trace_cache_size(self._client_train_fn())
+            )
+        elif self._stacked_engine:
+            m.gauge("jit.round_fn_traces").set(
+                eng.trace_cache_size(self._round_fn())
+            )
+        return stats
+
+    def _dispatch_round(self, t: int, lr: Optional[float] = None) -> Dict[str, float]:
         if self._async:
             return self._run_round_async(t, lr)
         if self._stacked_engine:
@@ -1150,6 +1213,7 @@ class FibecFed:
                 # wall-clock-aware sampling interpolates on the curriculum
                 # ramp: prefer fast clients early, uniform once data is full
                 progress=self.schedule.progress,
+                telemetry=self.tel,
             )
         return self._scheduler
 
@@ -1174,9 +1238,15 @@ class FibecFed:
         def _cap(ci: int, n_sel: int) -> Optional[int]:
             if not cfg.adapt_steps:
                 return None
-            return adapted_step_count(
-                n_sel, sched.scenario.rel_speed(ci), cfg.min_steps
+            # pace_mode picks the relative-speed signal: the scenario's
+            # ground truth, or the scheduler's per-client EMA of observed
+            # completion times (scenario-free, so it works in deployment)
+            rel = (
+                sched.observed_rel_speed(ci)
+                if cfg.pace_mode == "observed"
+                else sched.scenario.rel_speed(ci)
             )
+            return adapted_step_count(n_sel, rel, cfg.min_steps)
 
         def plan(ci: int, t: int) -> int:
             sel = curr.selected_batch_ids(self.schedule, t, self.clients[ci].order)

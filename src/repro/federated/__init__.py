@@ -13,6 +13,7 @@ from repro.federated.async_agg import (
 from repro.federated.baselines import BASELINES, make_runner, run_experiment
 from repro.federated.compress import (
     CompressionConfig,
+    leaf_upload_breakdown,
     leaf_upload_bytes,
     topk_k,
 )

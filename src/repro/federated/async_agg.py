@@ -88,11 +88,13 @@ import numpy as np
 
 from repro.federated.compress import CompressionConfig
 from repro.federated.hetero import BoundScenario
+from repro.obs import VIRTUAL, ensure
 
 T = TypeVar("T")
 
 
 MERGE_MODES = ("buffered", "delta")
+PACE_MODES = ("scenario", "observed")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -137,6 +139,15 @@ class AsyncAggConfig:
     its selected batches, never below ``min_steps`` (see
     :func:`adapted_step_count`; applied by the runner, which owns the
     curriculum).
+    ``pace_mode`` — where ``adapt_steps`` gets its relative-speed signal:
+    ``"scenario"`` (default) reads the bound scenario's ground-truth
+    ``rel_speed`` — fine in simulation, unavailable in deployment;
+    ``"observed"`` paces against a per-client EMA of telemetry-observed
+    per-step completion times (:meth:`AsyncScheduler.observed_rel_speed`),
+    which needs no scenario knowledge and adapts to drift. Unobserved
+    clients pace at 1.0 (full steps) until their first completion, so the
+    first wave is identical in both modes, and under a homogeneous fleet
+    the two modes coincide. Ignored unless ``adapt_steps=True``.
     ``sampling_bias`` — strength of wall-clock-aware cohort sampling: > 0
     weights dispatch toward fast clients early in the curriculum ramp,
     relaxing to uniform as the ramp completes (see :func:`cohort_weights`).
@@ -159,6 +170,7 @@ class AsyncAggConfig:
     max_buffer_size: Optional[int] = None
     adapt_steps: bool = False
     min_steps: int = 1
+    pace_mode: str = "scenario"
     sampling_bias: float = 0.0
     compression: Optional[CompressionConfig] = None
 
@@ -189,6 +201,10 @@ class AsyncAggConfig:
             raise ValueError("max_buffer_size must be >= min_buffer_size")
         if self.min_steps < 1:
             raise ValueError("min_steps must be >= 1")
+        if self.pace_mode not in PACE_MODES:
+            raise ValueError(
+                f"pace_mode must be one of {PACE_MODES}, got {self.pace_mode!r}"
+            )
         if self.sampling_bias < 0.0:
             raise ValueError("sampling_bias must be >= 0")
 
@@ -366,6 +382,11 @@ class _Event:
     kind: str  # "complete" | "drop"
     client: int
     payload: Any = None
+    # virtual timeline of the dispatch, kept for the tracer and the observed-
+    # pace EMA: when the server decided to dispatch, and when the client
+    # actually started (>= dispatched under bursty arrivals)
+    dispatched: float = 0.0
+    start: float = 0.0
 
     def __lt__(self, other: "_Event") -> bool:
         return (self.time, self.seq) < (other.time, other.seq)
@@ -422,8 +443,10 @@ class AsyncScheduler:
         rng: np.random.Generator,
         cfg: Optional[AsyncAggConfig] = None,
         progress: Optional[Callable[[int], float]] = None,
+        telemetry=None,
     ):
         cfg = cfg or AsyncAggConfig()
+        self.tel = ensure(telemetry)
         self.num_clients = num_clients
         self.buffer_size = cfg.buffer_size or cohort_size
         self.concurrency = cfg.concurrency or cohort_size
@@ -469,6 +492,28 @@ class AsyncScheduler:
         self._rate_ema: Optional[float] = None
         self._heap: List[_Event] = []
         self._seq = itertools.count()
+        self.pace_mode = cfg.pace_mode
+        # per-client EMA (momentum 0.5) of observed virtual seconds per
+        # curriculum step, dispatch -> report; feeds observed_rel_speed and
+        # the async.completion_s telemetry histogram
+        self._obs_step_time: dict = {}
+        # virtual time each buffered payload arrived (tracing only), keyed
+        # by payload id; entries live exactly as long as the buffer entry
+        self._buffered_at: dict = {}
+
+    def observed_rel_speed(self, client: int) -> float:
+        """Slowdown of ``client`` relative to the fastest *observed* client
+        (>= 1.0), from the per-step completion-time EMA — the scenario-free
+        twin of ``BoundScenario.rel_speed``. A client with no completions
+        yet (or an empty EMA table) reports 1.0: pace adaptation starts
+        only once there is evidence, so the first wave always trains its
+        full step budget.
+        """
+        obs = self._obs_step_time
+        t = obs.get(client)
+        if t is None:
+            return 1.0
+        return max(1.0, float(t / min(obs.values())))
 
     # -- dispatch ----------------------------------------------------------
 
@@ -506,11 +551,17 @@ class AsyncScheduler:
             if self.scenario.is_dropped(ci):
                 # the device does the work but never reports back
                 done = start + self.scenario.round_trip_time(ci, plan(ci, round_t))
-                ev = _Event(done, next(self._seq), "drop", ci)
+                ev = _Event(
+                    done, next(self._seq), "drop", ci,
+                    dispatched=self.clock, start=start,
+                )
             else:
                 payload = train(ci, round_t, self.version)
                 done = start + self.scenario.round_trip_time(ci, payload.n_steps)
-                ev = _Event(done, next(self._seq), "complete", ci, payload)
+                ev = _Event(
+                    done, next(self._seq), "complete", ci, payload,
+                    dispatched=self.clock, start=start,
+                )
             heapq.heappush(self._heap, ev)
         return count
 
@@ -536,7 +587,23 @@ class AsyncScheduler:
             if ev.kind == "drop":
                 self.total_dropped += 1
                 self._dropped_since_flush += 1
+                if self.tel.enabled:
+                    self.tel.instant(
+                        "drop", ts=ev.time, clock=VIRTUAL, cat="async",
+                        track=f"client/{ev.client}",
+                    )
                 continue
+            # observed pacing signal: virtual seconds per curriculum step,
+            # server-dispatch to report (comm + burst wait + jitter included
+            # — what a scenario-blind server would actually measure)
+            n_steps = max(1, int(getattr(ev.payload, "n_steps", 1)))
+            per_step = (ev.time - ev.dispatched) / n_steps
+            prev = self._obs_step_time.get(ev.client)
+            self._obs_step_time[ev.client] = (
+                per_step if prev is None else 0.5 * prev + 0.5 * per_step
+            )
+            if self.tel.enabled:
+                self._trace_completion(ev)
             self.buffer.append(ev.payload)
             self.total_completed += 1
             if len(self.buffer) >= self.buffer_size:
@@ -548,8 +615,58 @@ class AsyncScheduler:
                 # advancing the clock until fresh completions arrive
                 self._dispatch(round_t, plan, train)
 
+    def _trace_completion(self, ev: _Event) -> None:
+        """Decompose a completion's round trip into virtual-clock spans.
+
+        The scheduler only prices whole round trips, but the pieces are
+        recoverable after the fact: one comm leg each side of the compute
+        window, and any burst wait between the server's dispatch decision
+        and the client's actual start folds into the dispatch span. Byte
+        args ride on the spans so a trace's upload totals reconcile with
+        the runner's wire-format comm accounting (asserted in tests).
+        """
+        u = ev.payload
+        leg = self.scenario.comm_leg_time(ev.client)
+        track = f"client/{ev.client}"
+        tracer = self.tel.tracer
+        down = getattr(u, "comm_bytes", 0) - getattr(u, "upload_bytes", 0)
+        tracer.add_span(
+            "dispatch", start=ev.dispatched, end=ev.start + leg,
+            clock=VIRTUAL, cat="async", track=track,
+            args={
+                "round": getattr(u, "round_t", 0),
+                "version": getattr(u, "pulled_version", 0),
+                "download_bytes": down,
+            },
+        )
+        tracer.add_span(
+            "compute", start=ev.start + leg, end=ev.time - leg,
+            clock=VIRTUAL, cat="async", track=track,
+            args={"n_steps": getattr(u, "n_steps", 0)},
+        )
+        tracer.add_span(
+            "upload", start=ev.time - leg, end=ev.time,
+            clock=VIRTUAL, cat="async", track=track,
+            args={"upload_bytes": getattr(u, "upload_bytes", 0)},
+        )
+        self._buffered_at[id(u)] = ev.time
+        m = self.tel.metrics
+        m.histogram("async.completion_s").observe(ev.time - ev.dispatched)
+        m.counter("async.completions").inc()
+
     def _flush(self) -> Optional[MergeResult]:
         updates, self.buffer = self.buffer, []
+        if self.tel.enabled:
+            # each update waited in the server buffer from its report time
+            # to this flush; stale discards are resolved below, but their
+            # buffer residency is identical
+            for u in updates:
+                arrived = self._buffered_at.pop(id(u), self.clock)
+                self.tel.tracer.add_span(
+                    "buffer", start=arrived, end=self.clock,
+                    clock=VIRTUAL, cat="async",
+                    track=f"client/{getattr(u, 'client', '?')}",
+                )
         if self.staleness_cutoff is not None:
             # strictly-older-than-the-bound updates are discarded (their
             # clients become dispatchable again); exactly-at-bound merges
@@ -571,6 +688,15 @@ class AsyncScheduler:
                     self._stale_upload_bytes_since_flush += getattr(
                         u, "upload_bytes", 0
                     )
+                    if self.tel.enabled:
+                        self.tel.instant(
+                            "stale_drop", ts=self.clock, clock=VIRTUAL,
+                            cat="async",
+                            track=f"client/{getattr(u, 'client', '?')}",
+                            args={
+                                "staleness": self.version - u.pulled_version
+                            },
+                        )
             updates = fresh
             if not updates:
                 return None
@@ -610,6 +736,24 @@ class AsyncScheduler:
         )
         if self.adapt_buffer:
             self._adapt_buffer_size(result)
+        if self.tel.enabled:
+            self.tel.instant(
+                "merge", ts=self.clock, clock=VIRTUAL, cat="async",
+                track="server",
+                args={
+                    "version": self.version,
+                    "merged": result.completed,
+                    "dropped": result.dropped,
+                    "stale_dropped": result.stale_dropped,
+                },
+            )
+            m = self.tel.metrics
+            m.counter("async.merges").inc()
+            m.counter("async.dropped").inc(result.dropped)
+            m.counter("async.stale_dropped").inc(result.stale_dropped)
+            m.gauge("async.buffer_size").set(self.buffer_size)
+            for tau in staleness:
+                m.histogram("async.staleness").observe(int(tau))
         return result
 
     def _adapt_buffer_size(self, result: MergeResult) -> None:

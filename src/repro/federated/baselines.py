@@ -57,6 +57,7 @@ def make_runner(
     async_cfg: Any = None,
     compression: Any = None,
     client_ranks: Any = None,
+    telemetry: Any = None,
 ) -> FibecFed:
     """Build a :class:`FibecFed` runner from a named baseline preset.
 
@@ -86,6 +87,9 @@ def make_runner(
         comm accounting; ``None`` is an exact no-op.
       client_ranks: per-client effective LoRA rank (resource-adaptive
         rank heterogeneity); ``None`` = full rank everywhere.
+      telemetry: optional ``repro.obs.Telemetry`` recording round spans and
+        the metrics registry; ``None`` installs the no-op recorder
+        (bit-identical run).
 
     Returns:
       An un-initialized runner: call ``init_phase()`` once, then
@@ -101,7 +105,7 @@ def make_runner(
         model, loss_fn, fl, client_data, seed=seed, optimizer=optimizer,
         fused_optimizer=fused_optimizer, engine=engine, mesh=mesh,
         scenario=scenario, async_cfg=async_cfg, compression=compression,
-        client_ranks=client_ranks, **preset
+        client_ranks=client_ranks, telemetry=telemetry, **preset
     )
 
 

@@ -87,17 +87,37 @@ def _value_bytes(n: int, width: str, itemsize: int) -> int:
     return n * itemsize  # float: leaf dtype
 
 
+def leaf_upload_breakdown(
+    n_values: int, itemsize: int, cfg: "CompressionConfig | None"
+) -> dict:
+    """Wire-format composition of one leaf's upload payload, in bytes.
+
+    Returns ``{"values": ..., "scales": ..., "indices": ...}`` — the metrics
+    layer records the components so a trace shows *where* compressed wire
+    bytes go (a top-k payload at small ratios is mostly int32 indices, which
+    is why the ratio floor is ~6.4x, not 1/ratio).
+    """
+    if n_values <= 0:
+        return {"values": 0, "scales": 0, "indices": 0}
+    if cfg is None or not cfg.enabled:
+        return {"values": n_values * itemsize, "scales": 0, "indices": 0}
+    if cfg.mode == "topk":
+        k = topk_k(n_values, cfg.topk_ratio)
+        return {
+            "values": _value_bytes(k, cfg.topk_values, itemsize),
+            "scales": SCALE_BYTES if cfg.qmax else 0,
+            "indices": k * INDEX_BYTES,
+        }
+    groups = -(-n_values // QUANT_GROUP)
+    return {
+        "values": _value_bytes(n_values, cfg.mode, itemsize),
+        "scales": groups * SCALE_BYTES,
+        "indices": 0,
+    }
+
+
 def leaf_upload_bytes(
     n_values: int, itemsize: int, cfg: "CompressionConfig | None"
 ) -> int:
     """Wire bytes for one leaf's upload payload (values + scales + indices)."""
-    if n_values <= 0:
-        return 0
-    if cfg is None or not cfg.enabled:
-        return n_values * itemsize
-    if cfg.mode == "topk":
-        k = topk_k(n_values, cfg.topk_ratio)
-        scales = SCALE_BYTES if cfg.qmax else 0
-        return _value_bytes(k, cfg.topk_values, itemsize) + k * INDEX_BYTES + scales
-    groups = -(-n_values // QUANT_GROUP)
-    return _value_bytes(n_values, cfg.mode, itemsize) + groups * SCALE_BYTES
+    return sum(leaf_upload_breakdown(n_values, itemsize, cfg).values())

@@ -206,10 +206,16 @@ class BoundScenario:
             base *= float(self.rng.lognormal(0.0, self.preset.jitter_sigma))
         return base
 
+    def comm_leg_time(self, client: int) -> float:
+        """One transfer leg (pull *or* push) in virtual seconds — half the
+        round trip's comm budget. The tracer uses this to decompose a
+        completion's round trip into pull / compute / push spans."""
+        return self.preset.comm_latency * float(self.bandwidth[client])
+
     def round_trip_time(self, client: int, n_steps: int) -> float:
         """Pull + local training + push, in virtual seconds. A bandwidth-
         constrained client pays its per-transfer multiplier on both legs."""
-        comm = 2.0 * self.preset.comm_latency * float(self.bandwidth[client])
+        comm = 2.0 * self.comm_leg_time(client)
         return comm + self.compute_time(client, n_steps)
 
     def is_dropped(self, client: int) -> bool:

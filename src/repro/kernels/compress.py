@@ -73,6 +73,7 @@ def fake_compress_2d(
         use_thresh=use_thresh,
         per_leaf_scale=per_leaf_scale,
     )
+    # no donation: x is live in both outputs (y reads it, residual = x - y)
     return tuple(
-        _call(kernel, scal, (x,), (x.dtype, x.dtype), interpret=interpret)
+        _call(kernel, scal, (x,), (x.dtype, x.dtype), {}, interpret=interpret)
     )

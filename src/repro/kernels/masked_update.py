@@ -97,11 +97,20 @@ def _adamw_kernel(
     out_refs[2][...] = v_new.astype(out_refs[2].dtype)
 
 
-def _call(kernel, scal, tensors, out_dtypes, *, interpret: bool):
+def _call(kernel, scal, tensors, out_dtypes, aliases, *, interpret: bool):
     """Shared pallas_call plumbing: every tensor is (R, C) tile-multiple,
     ``scal`` is the (1, SCAL_WIDTH) traced-scalar row in SMEM. Each output
     keeps its own source dtype (moments may be wider than the params — a
-    param-dtype round trip would break the bit-for-bit frozen contract)."""
+    param-dtype round trip would break the bit-for-bit frozen contract).
+
+    ``aliases`` maps *tensor* index -> output index for state tensors whose
+    output overwrites them (p -> p', μ -> μ', m/v -> m'/v'). Donating these
+    buffers lets XLA update params and moments in place instead of
+    materializing fresh output allocations: the kernel reads each state tile
+    before its only write, so in-place is safe, and the wrapped callers
+    (:mod:`repro.kernels.ops`) always pass freshly tiled intermediates inside
+    a jit, so nothing live is clobbered. Input index 0 is the SMEM scal row,
+    hence the +1 shift."""
     R, C = tensors[0].shape
     grid = (R // BLOCK_ROWS, C // BLOCK_COLS)
     tile = pl.BlockSpec((BLOCK_ROWS, BLOCK_COLS), lambda i, j: (i, j))
@@ -116,6 +125,7 @@ def _call(kernel, scal, tensors, out_dtypes, *, interpret: bool):
         + [tile] * len(tensors),
         out_specs=[tile] * len(out_dtypes),
         out_shape=[jax.ShapeDtypeStruct((R, C), dt) for dt in out_dtypes],
+        input_output_aliases={1 + t: o for t, o in aliases.items()},
         interpret=interpret,
     )(scal, *tensors)
 
@@ -138,7 +148,8 @@ def masked_sgd_update_2d(
     )
     tensors = (p, g) + ((mu,) if momentum else ()) + ((mask,) if mask is not None else ())
     out_dtypes = (p.dtype, mu.dtype) if momentum else (p.dtype,)
-    out = _call(kernel, scal, tensors, out_dtypes, interpret=interpret)
+    aliases = {0: 0, 2: 1} if momentum else {0: 0}  # p -> p', μ -> μ'
+    out = _call(kernel, scal, tensors, out_dtypes, aliases, interpret=interpret)
     return (out[0], out[1]) if momentum else (out[0], None)
 
 
@@ -164,6 +175,10 @@ def masked_adamw_update_2d(
         _adamw_kernel, b1=b1, b2=b2, eps=eps, wd=wd, has_mask=mask is not None
     )
     tensors = (p, g, m, v) + ((mask,) if mask is not None else ())
+    aliases = {0: 0, 2: 1, 3: 2}  # p -> p', m -> m', v -> v'
     return tuple(
-        _call(kernel, scal, tensors, (p.dtype, m.dtype, v.dtype), interpret=interpret)
+        _call(
+            kernel, scal, tensors, (p.dtype, m.dtype, v.dtype), aliases,
+            interpret=interpret,
+        )
     )

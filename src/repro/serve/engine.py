@@ -37,6 +37,7 @@ import numpy as np
 
 from repro.lora import gather_adapter_slots, stack_adapter_trees
 from repro.models.model_api import ModelFns
+from repro.obs import ensure as ensure_telemetry
 from repro.serve.requests import (
     Completion,
     Request,
@@ -141,8 +142,10 @@ class ServeEngine:
         num_slots: int = 8,
         adapters: Optional[List[Any]] = None,
         max_new_cap: int = 128,
+        telemetry: Any = None,
     ):
         self.model = model
+        self.tel = ensure_telemetry(telemetry)
         self.params = params
         self.lora = lora
         self.cache_len = cache_len
@@ -158,9 +161,10 @@ class ServeEngine:
         self._segment = self._build_segment()
         self._admit = jax.jit(self._admit_fn)
         self._first_token = jax.jit(self._first_token_fn)
-        self.scheduler = SlotScheduler(num_slots)
+        self.scheduler = SlotScheduler(num_slots, telemetry=self.tel)
         self._state: Optional[Dict[str, Any]] = None
         self._ttft: Dict[int, float] = {}
+        self._serve_t0: Optional[float] = None  # first admission (wall)
         self._rid = itertools.count()
         self.stats = {
             "prefill_calls": 0,
@@ -297,6 +301,12 @@ class ServeEngine:
             req.request_id = next(self._rid)
         req.submit_time = time.perf_counter()
         self.scheduler.enqueue(req)
+        if self.tel.enabled:
+            self.tel.metrics.counter("serve.submitted").inc()
+            self.tel.instant(
+                "submit", cat="serve", track="serve",
+                args={"request_id": req.request_id, "adapter_id": req.adapter_id},
+            )
         return req.request_id
 
     def step(self) -> List[Completion]:
@@ -308,11 +318,18 @@ class ServeEngine:
             return []
         stop_on_free = jnp.array(self.scheduler.queued > 0)
         lora_src = self.lora if self._single else self._stacked
-        self._state, nsteps = self._segment(
-            self.params, lora_src, self._state, stop_on_free
-        )
+        with self.tel.span("segment", cat="serve", track="serve") as sargs:
+            self._state, nsteps = self._segment(
+                self.params, lora_src, self._state, stop_on_free
+            )
+            nsteps = int(nsteps)  # blocks: the span covers device time too
+            sargs["nsteps"] = nsteps
+        if self.tel.enabled:
+            m = self.tel.metrics
+            m.counter("serve.segments").inc()
+            m.counter("serve.decode_steps").inc(nsteps)
         self.stats["segment_calls"] += 1
-        self.stats["jitted_decode_steps"] += int(nsteps)
+        self.stats["jitted_decode_steps"] += nsteps
         return self._retire()
 
     def drain(self) -> List[Completion]:
@@ -324,9 +341,10 @@ class ServeEngine:
 
     def reset(self) -> None:
         """Drop all slot state and queued work; keep compiled functions."""
-        self.scheduler = SlotScheduler(self.num_slots)
+        self.scheduler = SlotScheduler(self.num_slots, telemetry=self.tel)
         self._state = None
         self._ttft = {}
+        self._serve_t0 = None
         self.stats = {k: 0 for k in self.stats}
 
     # -- internals ------------------------------------------------------
@@ -384,7 +402,17 @@ class ServeEngine:
         return st
 
     def _admit_group(self, slots: List[int], reqs: List[Request]) -> None:
+        with self.tel.span(
+            "admit", cat="serve", track="serve", args={"group": len(reqs)}
+        ):
+            self._admit_group_body(slots, reqs)
+
+    def _admit_group_body(self, slots: List[int], reqs: List[Request]) -> None:
         cfg = self.model.cfg
+        if self.tel.enabled:
+            t_admit = time.perf_counter()
+            if self._serve_t0 is None:
+                self._serve_t0 = t_admit
         batch = batch_from_requests(reqs)
         ids = jnp.asarray([r.adapter_id for r in reqs], jnp.int32)
         lora_g = (
@@ -392,17 +420,25 @@ class ServeEngine:
             if self._single
             else gather_adapter_slots(cfg, self._stacked, ids)
         )
-        logits, cache_g, pos_s = self._prefill(self.params, lora_g, batch)
-        self.stats["prefill_calls"] += 1
-        keys0 = jax.vmap(jax.random.PRNGKey)(
-            jnp.asarray([r.sampling.seed for r in reqs], jnp.int32)
-        )
-        temps = jnp.asarray([r.sampling.temperature for r in reqs], jnp.float32)
-        tok0 = self._first_token(logits, keys0, temps)
-        tok0.block_until_ready()  # first token exists now: the TTFT point
+        with self.tel.span("prefill", cat="serve", track="serve"):
+            logits, cache_g, pos_s = self._prefill(self.params, lora_g, batch)
+            self.stats["prefill_calls"] += 1
+            keys0 = jax.vmap(jax.random.PRNGKey)(
+                jnp.asarray([r.sampling.seed for r in reqs], jnp.int32)
+            )
+            temps = jnp.asarray([r.sampling.temperature for r in reqs], jnp.float32)
+            tok0 = self._first_token(logits, keys0, temps)
+            tok0.block_until_ready()  # first token exists now: the TTFT point
         now = time.perf_counter()
         for r in reqs:
             self._ttft[r.request_id] = now - (r.submit_time or now)
+        if self.tel.enabled:
+            m = self.tel.metrics
+            for r in reqs:
+                m.histogram("serve.ttft_s").observe(self._ttft[r.request_id])
+                m.histogram("serve.queue_s").observe(
+                    max(0.0, t_admit - (r.submit_time or t_admit))
+                )
         g = len(reqs)
         S = int(pos_s)
         budgets = []
@@ -545,4 +581,25 @@ class ServeEngine:
             )
         st["active"] = st["active"].at[jnp.asarray(fin_slots)].set(False)
         self.stats["completed"] += len(comps)
+        if self.tel.enabled and comps:
+            m = self.tel.metrics
+            m.counter("serve.completed").inc(len(comps))
+            for c in comps:
+                m.counter("serve.tokens_emitted").inc(c.steps)
+                m.histogram("serve.tokens_per_completion").observe(float(c.steps))
+                self.tel.instant(
+                    "complete", cat="serve", track="serve",
+                    args={
+                        "request_id": c.request_id,
+                        "adapter_id": c.adapter_id,
+                        "steps": c.steps,
+                        "finish_reason": c.finish_reason,
+                    },
+                )
+            now = time.perf_counter()
+            elapsed = now - (self._serve_t0 or now)
+            if elapsed > 0:
+                m.gauge("serve.useful_tokens_per_s").set(
+                    m.counter("serve.tokens_emitted").value / elapsed
+                )
         return comps

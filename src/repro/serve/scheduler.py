@@ -13,6 +13,7 @@ from __future__ import annotations
 from collections import deque
 from typing import Dict, List, Tuple
 
+from repro.obs import ensure
 from repro.serve.requests import Request
 
 
@@ -23,10 +24,11 @@ def _signature(req: Request):
 
 
 class SlotScheduler:
-    def __init__(self, num_slots: int):
+    def __init__(self, num_slots: int, telemetry=None):
         if num_slots < 1:
             raise ValueError("num_slots must be >= 1")
         self.num_slots = num_slots
+        self.tel = ensure(telemetry)
         self._free = deque(range(num_slots))
         self._busy: Dict[int, Request] = {}
         self._queue: deque = deque()
@@ -45,6 +47,13 @@ class SlotScheduler:
 
     def enqueue(self, req: Request) -> None:
         self._queue.append(req)
+        if self.tel.enabled:
+            self._gauges()
+
+    def _gauges(self) -> None:
+        m = self.tel.metrics
+        m.gauge("serve.queue_depth").set(float(len(self._queue)))
+        m.gauge("serve.slots_free").set(float(len(self._free)))
 
     def admissions(self) -> List[Tuple[List[int], List[Request]]]:
         """Assign queued requests to free slots; returns [(slots, requests)].
@@ -67,6 +76,9 @@ class SlotScheduler:
                 slots.append(slot)
                 reqs.append(req)
             groups.append((slots, reqs))
+        if groups and self.tel.enabled:
+            self.tel.metrics.counter("serve.admission_groups").inc(len(groups))
+            self._gauges()
         return groups
 
     def release(self, slot: int) -> Request:
@@ -74,4 +86,6 @@ class SlotScheduler:
             raise RuntimeError(f"release of slot {slot} which is not busy")
         req = self._busy.pop(slot)
         self._free.append(slot)
+        if self.tel.enabled:
+            self._gauges()
         return req

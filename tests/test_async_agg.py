@@ -614,3 +614,57 @@ def test_cache_clear_then_reinit_recompiles_cleanly(tiny_world):
     )
     r2.init_phase()
     assert np.isfinite(r2.run_round(0)["loss"])
+
+
+# ---------------------------------------------------------------------------
+# observed pacing (pace_mode="observed"): the scenario-free adapt_steps signal
+# ---------------------------------------------------------------------------
+
+
+def test_pace_mode_validated():
+    with pytest.raises(ValueError, match="pace_mode"):
+        AsyncAggConfig(pace_mode="bogus")
+    for mode in ("scenario", "observed"):
+        assert AsyncAggConfig(pace_mode=mode).pace_mode == mode
+
+
+def test_observed_rel_speed_defaults_to_one_before_evidence():
+    # no completions yet => 1.0 everywhere: the first wave always trains
+    # its full step budget instead of guessing who the stragglers are
+    sched = make_scheduler("straggler")
+    for ci in range(8):
+        assert sched.observed_rel_speed(ci) == 1.0
+
+
+def test_observed_rel_speed_converges_to_scenario_truth():
+    """The straggler preset is jitter-free with zero comm latency, so the
+    observed per-step time is exactly ``step_time * speed[client]`` — the
+    completion-time EMA must reproduce the scenario's ground-truth
+    ``rel_speed`` for every client that has reported."""
+    sched = make_scheduler("straggler", seed=3, buffer_size=2)
+    trained = []
+    plan, train = make_stub_callbacks(trained)
+    for t in range(12):
+        sched.run_until_merge(t, plan, train)
+    observed = sorted(sched._obs_step_time)
+    assert len(observed) >= 6  # most of the fleet has reported
+    assert any(sched.scenario.rel_speed(ci) == 1.0 for ci in observed)
+    for ci in observed:
+        assert sched.observed_rel_speed(ci) == pytest.approx(
+            sched.scenario.rel_speed(ci)
+        )
+
+
+def test_observed_pacing_noop_when_homogeneous():
+    # uniform fleet: every observation is identical, so the observed signal
+    # stays pinned at 1.0 and adapt_steps never shortens anyone's round
+    sched = make_scheduler(
+        "uniform", seed=1, adapt_steps=True, pace_mode="observed"
+    )
+    trained = []
+    plan, train = make_stub_callbacks(trained)
+    for t in range(4):
+        sched.run_until_merge(t, plan, train)
+    assert sched._obs_step_time  # evidence exists...
+    for ci in range(8):
+        assert sched.observed_rel_speed(ci) == 1.0  # ...and shows no skew

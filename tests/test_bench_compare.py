@@ -184,3 +184,28 @@ def test_committed_async_baseline_is_loadable():
         # in strictly less virtual wall-clock under >= 4x speed skew
         assert sc["async_virtual_time"] < sc["sync_virtual_time"]
         assert payload["speedups"][f"async_over_sync/{name}"] > 1.0
+
+
+def test_metrics_snapshot_block_tolerated_not_gated(files, capsys):
+    """Bench payloads now carry an observability metrics_snapshot block; the
+    gate must announce it, never compare it, and pass even when the snapshots
+    differ wildly between current and baseline."""
+    cur_payload = _result()
+    cur_payload["metrics_snapshot"] = {
+        "runtime": {"counters": {"jit.program_builds": 900.0}}
+    }
+    base_payload = _result()
+    base_payload["metrics_snapshot"] = {
+        "runtime": {"counters": {"jit.program_builds": 3.0}},
+        "extra_section": {"gauges": {"whatever": 1.0}},
+    }
+    cur = files("cur.json", cur_payload)
+    base = files("base.json", base_payload)
+    assert bench_compare.main([cur, "--baseline", base]) == 0
+    out = capsys.readouterr().out
+    assert out.count("metrics_snapshot") == 2  # announced for both sides
+    assert "not gated" in out
+    # absence on either side is equally fine (pre-observability payloads)
+    bare = files("bare.json", _result())
+    assert bench_compare.main([bare, "--baseline", base]) == 0
+    assert bench_compare.main([cur, "--baseline", bare]) == 0
