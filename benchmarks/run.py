@@ -9,6 +9,7 @@ Prints ``name,us_per_call,derived`` CSV. Modules:
   kernels_bench    — kernel reference-path micro-benchmarks
   masked_update_bench — fused vs unfused masked optimizer update step
   async_bench      — sync vs async virtual wall-clock under device skew
+  population_bench — out-of-core client store at 1k/10k clients (RSS bound)
   roofline         — §Roofline table from the dry-run artifacts
 
 Env: REPRO_BENCH_ROUNDS / REPRO_BENCH_DEVICES scale the FL runs;
@@ -26,6 +27,7 @@ MODULES = [
     "masked_update_bench",
     "fl_round_bench",
     "async_bench",
+    "population_bench",
     "table1_accuracy",
     "table2_time",
     "table13_comm",

@@ -1,1 +1,8 @@
-from repro.checkpoint.ckpt import save_checkpoint, load_checkpoint, latest_checkpoint
+from repro.checkpoint.ckpt import (
+    clean_stale_tmp,
+    latest_checkpoint,
+    load_checkpoint,
+    load_tree,
+    save_checkpoint,
+    save_tree,
+)

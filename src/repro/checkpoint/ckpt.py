@@ -2,29 +2,59 @@
 
 Pytrees are flattened to ``path/to/leaf`` keys; dtypes/shapes round-trip
 exactly. Writes are atomic (tmp + rename) so a crashed run never leaves a
-half-written checkpoint behind.
+half-written checkpoint behind. ``save_tree``/``load_tree`` are the generic
+single-file primitives; ``save_checkpoint``/``load_checkpoint`` layer the
+``ckpt_<step>.npz`` naming + GC convention on top. The same primitives back
+the out-of-core client store (``repro.federated.store``), which spills one
+npz per cold client.
+
+A hard crash (SIGKILL mid-write) can strand a ``*.tmp`` file; writers never
+pick those up, and ``clean_stale_tmp`` sweeps them on the next open.
 """
 from __future__ import annotations
 
+import json
 import os
 import re
 import tempfile
 from typing import Any, Dict, Optional
 
-import jax
 import numpy as np
 
 from repro.utils import flatten_dict, unflatten_dict
 
 _STEP_RE = re.compile(r"ckpt_(\d+)\.npz$")
 
+# Reserved npz entry recording each leaf's dtype name. numpy serializes
+# extension dtypes (bfloat16, float8_*, from ml_dtypes) as opaque void
+# bytes, so without this manifest a bf16 leaf would reload as ``V2``.
+_DTYPE_MANIFEST = "__repro_dtype_manifest__"
 
-def save_checkpoint(directory: str, step: int, tree: Any, *, keep: int = 3) -> str:
-    """Save `tree` (nested dict of arrays) as ckpt_<step>.npz. Returns path."""
+
+def _resolve_dtype(name: str) -> np.dtype:
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes  # ships with jax
+
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def save_tree(path: str, tree: Any) -> str:
+    """Atomically write a nested-dict pytree to ``path`` as flat npz.
+
+    The write goes to a same-directory ``*.tmp`` file first and is renamed
+    into place, so readers only ever see complete files. Empty trees are
+    valid (they produce an npz with no entries). Returns ``path``.
+    """
+    directory = os.path.dirname(path) or "."
     os.makedirs(directory, exist_ok=True)
     flat = flatten_dict(tree)
     arrays = {k: np.asarray(v) for k, v in flat.items()}
-    path = os.path.join(directory, f"ckpt_{step}.npz")
+    manifest = {k: v.dtype.name for k, v in arrays.items()}
+    arrays[_DTYPE_MANIFEST] = np.frombuffer(
+        json.dumps(manifest, sort_keys=True).encode("utf-8"), dtype=np.uint8
+    )
     fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp")
     try:
         with os.fdopen(fd, "wb") as f:
@@ -33,14 +63,56 @@ def save_checkpoint(directory: str, step: int, tree: Any, *, keep: int = 3) -> s
     finally:
         if os.path.exists(tmp):
             os.unlink(tmp)
+    return path
+
+
+def load_tree(path: str) -> Dict[str, Any]:
+    """Load a flat-npz pytree written by :func:`save_tree` (nested dict out)."""
+    with np.load(path) as data:
+        manifest = {}
+        if _DTYPE_MANIFEST in data.files:
+            manifest = json.loads(bytes(data[_DTYPE_MANIFEST]).decode("utf-8"))
+        flat = {}
+        for k in data.files:
+            if k == _DTYPE_MANIFEST:
+                continue
+            arr = data[k]
+            want = manifest.get(k)
+            if want is not None and arr.dtype.name != want:
+                arr = arr.view(_resolve_dtype(want))
+            flat[k] = arr
+    return unflatten_dict(flat)
+
+
+def clean_stale_tmp(directory: str) -> int:
+    """Remove ``*.tmp`` leftovers from a crashed writer. Returns count removed.
+
+    Live writers hold their tmp file only for the duration of one
+    ``save_tree`` call, so this is safe to run whenever no save is in
+    flight (e.g. when (re)opening a checkpoint directory or store).
+    """
+    if not os.path.isdir(directory):
+        return 0
+    removed = 0
+    for name in os.listdir(directory):
+        if name.endswith(".tmp"):
+            try:
+                os.unlink(os.path.join(directory, name))
+                removed += 1
+            except OSError:  # pragma: no cover - racing unlink
+                pass
+    return removed
+
+
+def save_checkpoint(directory: str, step: int, tree: Any, *, keep: int = 3) -> str:
+    """Save `tree` (nested dict of arrays) as ckpt_<step>.npz. Returns path."""
+    path = save_tree(os.path.join(directory, f"ckpt_{step}.npz"), tree)
     _gc(directory, keep)
     return path
 
 
 def load_checkpoint(path: str) -> Dict[str, Any]:
-    with np.load(path) as data:
-        flat = {k: data[k] for k in data.files}
-    return unflatten_dict(flat)
+    return load_tree(path)
 
 
 def latest_checkpoint(directory: str) -> Optional[str]:

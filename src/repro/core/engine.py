@@ -378,6 +378,146 @@ def build_compressed_round_fn(
     return jax.jit(body, donate_argnums=(1, 2, 3, 13))
 
 
+def _cohort_round_body(
+    loss_fn: Callable,
+    opt_update: Callable,
+    *,
+    use_neuron_mask: bool,
+    compress: Any = None,
+) -> Callable:
+    """:func:`_round_body` for a *materialized cohort* — no population stack.
+
+    The vectorized engine owns a (C, ...) stack for the whole population and
+    gathers/scatters the round's k rows in-program. With an out-of-core
+    client store the population never fits on device, so the host fetches
+    just the cohort, stacks it to a leading k axis, and this body trains it
+    directly: identical line-15 merge, step scan, and fused server
+    aggregation, minus the gather/scatter bookends. Data arrives as the
+    cohort's own ``(k, NB, B, ...)`` grid (``stack_cohort``), already
+    bucketed so every round with the same (k, NB, S) shape reuses one
+    compiled program.
+    """
+
+    def round_fn(
+        params,
+        global_lora,
+        cohort_lora,
+        cohort_opt,
+        neuron_mask,
+        gal_mask,
+        data: Dict[str, Any],
+        sample_valid,
+        batch_idx,
+        step_valid,
+        weights,
+        lr,
+        cohort_residual=None,
+        comp_mask=None,
+    ):
+        # line 15: overwrite the GAL part of each client's LoRA with the
+        # global copy (dtype-preserving, gal_mask broadcast over k)
+        cl_lora = jax.tree.map(
+            lambda g, l, m: (m * g + (1.0 - m) * l).astype(l.dtype),
+            global_lora, cohort_lora, gal_mask,
+        )
+        cl_opt = cohort_opt
+        cl_mask = neuron_mask if use_neuron_mask else None
+
+        client_step = make_client_step(loss_fn, opt_update)
+
+        def one_step(lo, op, mk, batch, sv, act):
+            return client_step(params, lo, op, mk, batch, sv, lr, act)
+
+        def step(carry, xs):
+            lora_c, opt_c = carry
+            bidx, active = xs  # (k,), (k,)
+            batch = {kk: jax.vmap(lambda d, j: d[j])(v, bidx) for kk, v in data.items()}
+            sv = jax.vmap(lambda d, j: d[j])(sample_valid, bidx)
+            if use_neuron_mask:
+                loss, lora_c, opt_c = jax.vmap(one_step)(
+                    lora_c, opt_c, cl_mask, batch, sv, active
+                )
+            else:
+                loss, lora_c, opt_c = jax.vmap(
+                    lambda lo, op, b, m, a: one_step(lo, op, None, b, m, a)
+                )(lora_c, opt_c, batch, sv, active)
+            return (lora_c, opt_c), loss
+
+        (cl_lora, cl_opt), losses = jax.lax.scan(
+            step, (cl_lora, cl_opt), (batch_idx.T, step_valid.T)
+        )
+
+        if compress is None:
+            new_global = gal_weighted_merge(global_lora, gal_mask, cl_lora, weights)
+            return new_global, cl_lora, cl_opt, losses
+
+        # compressed upload: same fake-quantize/top-k round trip as the
+        # stacked engine, on the cohort's own residual rows
+        from repro.kernels import ops as _kops
+
+        ef = compress["error_feedback"]
+        delta = jax.tree.map(
+            lambda l, g, m: (l - g) * m, cl_lora, global_lora, gal_mask
+        )
+
+        def one(d, r, cm):
+            return _kops.fake_compress(
+                d, r, gal_mask if cm is None else cm,
+                qmax=compress["qmax"],
+                topk_ratio=compress["topk_ratio"],
+                use_thresh=compress["use_thresh"],
+            )
+
+        y, new_res = jax.vmap(
+            one,
+            in_axes=(
+                0,
+                0 if ef else None,
+                0 if compress["has_comp_mask"] else None,
+            ),
+        )(delta, cohort_residual if ef else None, comp_mask if compress["has_comp_mask"] else None)
+        new_global = gal_delta_merge(global_lora, gal_mask, y, weights)
+        return (
+            new_global,
+            cl_lora,
+            cl_opt,
+            losses,
+            new_res if ef else cohort_residual,
+        )
+
+    return round_fn
+
+
+def build_cohort_round_fn(
+    loss_fn: Callable, opt_update: Callable, *, use_neuron_mask: bool
+) -> Callable:
+    """Jitted cohort round program for the out-of-core client store.
+
+    ``round_fn(params, global_lora, cohort_lora, cohort_opt, neuron_mask,
+    gal_mask, data, sample_valid, batch_idx, step_valid, weights, lr) ->
+    (new_global_lora, new_cohort_lora, new_cohort_opt, losses (S, k))`` —
+    every cohort-stacked argument carries a leading k axis over the round's
+    clients; the host unstacks the outputs back into the store. The cohort
+    state is donated (it was stacked fresh for this round and the updated
+    copy replaces it).
+    """
+    body = _cohort_round_body(loss_fn, opt_update, use_neuron_mask=use_neuron_mask)
+    return jax.jit(body, donate_argnums=(1, 2, 3))
+
+
+def build_cohort_compressed_round_fn(
+    loss_fn: Callable, opt_update: Callable, *, use_neuron_mask: bool, compress
+) -> Callable:
+    """:func:`build_cohort_round_fn` with the compressed-upload aggregation:
+    two extra trailing arguments ``(cohort_residual, comp_mask)`` — scalar
+    placeholders when their knob is off — and a fifth output, the cohort's
+    updated error-feedback residual rows."""
+    body = _cohort_round_body(
+        loss_fn, opt_update, use_neuron_mask=use_neuron_mask, compress=compress
+    )
+    return jax.jit(body, donate_argnums=(1, 2, 3, 12))
+
+
 def build_sharded_round_fn(
     loss_fn: Callable, opt_update: Callable, *, use_neuron_mask: bool, mesh
 ) -> Callable:

@@ -66,9 +66,20 @@ from repro.core import fisher as fish
 from repro.core import gal as galmod
 from repro.core import sparse as sparsemod
 from repro.core.curriculum import CurriculumSchedule
-from repro.data.pipeline import gather_batch, make_batches, stack_clients
+from repro.data.pipeline import (
+    bucket_size,
+    gather_batch,
+    make_batches,
+    stack_clients,
+    stack_cohort,
+)
 from repro.kernels import ops as kops
-from repro.lora import gal_mask_tree, neuron_mask_tree, rank_mask_tree
+from repro.lora import (
+    gal_mask_tree,
+    lora_num_logical_layers,
+    neuron_mask_tree,
+    rank_mask_tree,
+)
 from repro.models.model_api import ModelFns
 from repro.obs import ensure as ensure_telemetry
 from repro.obs import runtime_metrics
@@ -167,6 +178,8 @@ class FibecFed:
         async_cfg: Optional[Any] = None,
         compression: Optional[Any] = None,
         client_ranks: Optional[Sequence[int]] = None,
+        store: Optional[Any] = None,
+        hierarchy: Optional[Any] = None,
         telemetry: Optional[Any] = None,
         seed: int = 0,
     ):
@@ -218,6 +231,23 @@ class FibecFed:
             bytes are rank-projected. Defaults to full rank everywhere;
             under ``engine="async"`` a scenario with
             ``slow_rank_fraction < 1`` derives ranks for the slow group.
+          store: a ``repro.federated.store.ClientStore`` owning the client
+            states. ``None`` (default) binds an ``InMemoryStore`` — the
+            whole population resident, bit-identical to the pre-store
+            engines. An ``OutOfCoreStore`` keeps only an LRU hot set of
+            client states resident (cold clients spill to flat-npz), so
+            peak memory is bounded by the hot-set size, not the population;
+            the stacked round then runs over just the sampled cohort
+            (``engine="vectorized"``) or the dispatched client
+            (``engine="async"``). Rejected for ``engine="sharded"`` — the
+            mesh-sharded population stack is resident by construction.
+          hierarchy: two-tier edge→server aggregation topology for
+            ``engine="async"`` (an int edge count or
+            ``repro.federated.hierarchy.HierarchyConfig``): each edge
+            reduces its region's buffered payloads to one partial weighted
+            sum and the server merges the edge summaries with unit weights
+            — bit-exact to the flat merge at one edge, equal up to float
+            reassociation otherwise. ``None`` (default) merges flat.
           telemetry: an optional ``repro.obs.Telemetry`` — spans every
             round/init phase on the wall clock (and, under ``engine="async"``,
             every client completion on the virtual clock), and fills the
@@ -241,6 +271,22 @@ class FibecFed:
             raise ValueError(
                 "scenario=/async_cfg= are only meaningful with engine='async'"
             )
+        # lazy imports: repro.federated's package init imports this module
+        from repro.federated.hierarchy import get_hierarchy
+        from repro.federated.store import ClientsView, InMemoryStore
+
+        if store is None:
+            store = InMemoryStore()
+        if store.out_of_core and engine == "sharded":
+            raise ValueError(
+                "engine='sharded' keeps the mesh-sharded population stack "
+                "resident by construction; use an in-memory store"
+            )
+        self.store = store
+        self._oocore = bool(store.out_of_core)
+        if hierarchy is not None and engine != "async":
+            raise ValueError("hierarchy= is only meaningful with engine='async'")
+        self._hierarchy = None if hierarchy is None else get_hierarchy(hierarchy)
         self.mesh = mesh
         self.model = model
         self.cfg = model.cfg
@@ -334,24 +380,53 @@ class FibecFed:
         self._rank_mask_cache: Dict[int, Any] = {}
         self._comp_mask_cache: Dict[int, Any] = {}
 
-        self.clients: List[ClientState] = []
-        for cd in client_data:
+        oocore = self._oocore
+
+        def _make_state(ci: int) -> ClientState:
+            cd = client_data[ci]
             n = len(next(iter(cd.values())))
-            self.clients.append(
-                ClientState(
-                    data=cd,
-                    n=n,
-                    batches=make_batches(n, fl.batch_size),
-                    order=np.arange(max(1, (n + fl.batch_size - 1) // fl.batch_size)),
-                    # loop engine: concrete per-client LoRA/opt copies; the
-                    # vectorized engine's client state lives in stacked trees
-                    # and clients get lazy views (below) instead
-                    _lora=None if vectorized else jax.tree.map(jnp.copy, init_lora),
-                    opt_state=None if vectorized else self.opt_init(init_lora),
-                )
+            return ClientState(
+                data=cd,
+                n=n,
+                batches=make_batches(n, fl.batch_size),
+                order=np.arange(max(1, (n + fl.batch_size - 1) // fl.batch_size)),
+                # in-memory stacked engines keep client state in stacked
+                # trees and clients get lazy views (below); everyone else —
+                # loop, async, and every out-of-core engine — owns concrete
+                # per-client LoRA/opt copies
+                _lora=(
+                    None
+                    if vectorized and not oocore
+                    else jax.tree.map(jnp.copy, init_lora)
+                ),
+                opt_state=(
+                    None if vectorized and not oocore else self.opt_init(init_lora)
+                ),
             )
 
-        if self._async:
+        def _make_shell(ci: int) -> ClientState:
+            # re-fetch scaffold for a spilled client: the store overwrites
+            # the host metadata from its resident copy and the device fields
+            # from the client's npz
+            cd = client_data[ci]
+            n = len(next(iter(cd.values())))
+            return ClientState(
+                data=cd,
+                n=n,
+                batches=make_batches(n, fl.batch_size),
+                order=np.arange(max(1, (n + fl.batch_size - 1) // fl.batch_size)),
+                opt_state=None,
+            )
+
+        self.store.bind(
+            client_data=client_data,
+            make_state=_make_state,
+            make_shell=_make_shell,
+            telemetry=self.tel,
+        )
+        self.clients: Sequence[ClientState] = ClientsView(self.store)
+
+        if self._async and not oocore:
             # per-client concrete LoRA/opt state (like the loop engine), but
             # data on the padded fixed-shape grid: every client's (NB, B, ...)
             # row has the same shape, so one compiled per-client scan program
@@ -360,7 +435,7 @@ class FibecFed:
             self._stack_data = {k_: jnp.asarray(v) for k_, v in stack.data.items()}
             self._sample_valid = jnp.asarray(stack.sample_valid)
 
-        if vectorized:
+        if vectorized and not oocore:
             C = len(self.clients)
             k = min(fl.devices_per_round, C)
             if self.mesh is not None:
@@ -416,6 +491,54 @@ class FibecFed:
         # sync engines record (chosen, client_steps) per round so benchmarks
         # can price the round barrier under a hetero.ScenarioPreset
         self.last_round_info: Optional[Dict[str, np.ndarray]] = None
+
+    # ------------------------------------------------------------------
+    # stacked client state (ownership lives on the store)
+    # ------------------------------------------------------------------
+    # The vectorized/sharded engines' population-stacked trees belong to the
+    # in-memory store (they ARE client state); these shims keep the runner's
+    # historical attribute names working for engines, tests, and benchmarks.
+    # On stores without stacked state (out-of-core) the getters read None.
+
+    @property
+    def _stacked_lora(self):
+        return getattr(self.store, "stacked_lora", None)
+
+    @_stacked_lora.setter
+    def _stacked_lora(self, value):
+        self.store.stacked_lora = value
+
+    @property
+    def _stacked_opt(self):
+        return getattr(self.store, "stacked_opt", None)
+
+    @_stacked_opt.setter
+    def _stacked_opt(self, value):
+        self.store.stacked_opt = value
+
+    @property
+    def _stacked_mask(self):
+        return getattr(self.store, "stacked_mask", None)
+
+    @_stacked_mask.setter
+    def _stacked_mask(self, value):
+        self.store.stacked_mask = value
+
+    @property
+    def _stacked_residual(self):
+        return getattr(self.store, "stacked_residual", None)
+
+    @_stacked_residual.setter
+    def _stacked_residual(self, value):
+        self.store.stacked_residual = value
+
+    @property
+    def _stacked_comp_mask(self):
+        return getattr(self.store, "stacked_comp_mask", None)
+
+    @_stacked_comp_mask.setter
+    def _stacked_comp_mask(self, value):
+        self.store.stacked_comp_mask = value
 
     # ------------------------------------------------------------------
     # jitted primitives (loop engine + shared)
@@ -557,6 +680,29 @@ class FibecFed:
             lambda: eng.build_round_fn(loss_fn, opt_update, use_neuron_mask=use_mask),
         )
 
+    def _cohort_round_fn(self, use_mask: bool):
+        """Round program over a *materialized cohort* (out-of-core store):
+        the stacked engines' round body minus the population gather/scatter
+        bookends. Programs are keyed on the cohort-stack shape by ``jit``;
+        ``stack_cohort``'s pow2 batch bucketing keeps the distinct shapes
+        (and therefore compiles) logarithmic in the population's spread."""
+        loss_fn, opt_update = self.loss_fn, self.opt_update
+        comp = self._compress_static()
+        if comp is not None:
+            ckey = tuple(sorted(comp.items()))
+            return _memo(
+                ("cohort_round_c", loss_fn, self._opt_key, use_mask, ckey),
+                lambda: eng.build_cohort_compressed_round_fn(
+                    loss_fn, opt_update, use_neuron_mask=use_mask, compress=comp
+                ),
+            )
+        return _memo(
+            ("cohort_round", loss_fn, self._opt_key, use_mask),
+            lambda: eng.build_cohort_round_fn(
+                loss_fn, opt_update, use_neuron_mask=use_mask
+            ),
+        )
+
     # async-engine programs ----------------------------------------------
 
     def _client_train_fn(self):
@@ -626,7 +772,7 @@ class FibecFed:
     def _compute_difficulty(self) -> None:
         """Lines 2-5: per-batch difficulty + ascending curriculum order."""
         metric = self.difficulty_metric
-        if self._stacked_engine and metric in ("fisher", "loss"):
+        if self._stacked_engine and not self._oocore and metric in ("fisher", "loss"):
             # one program over every (client, batch) cell, each client scored
             # with its own LoRA (matters on re-init after training rounds)
             scores = np.asarray(
@@ -648,7 +794,7 @@ class FibecFed:
     def _select_local_masks(self) -> None:
         """Lines 8-10: momentum-FIM warmup → per-client neuron keep-masks."""
         fl = self.fl
-        if self._stacked_engine:
+        if self._stacked_engine and not self._oocore:
             C = len(self.clients)
             C_stack = self._sample_valid.shape[0]  # includes mesh padding rows
             warm_idx = np.zeros((C_stack, fl.fim_warmup_epochs), np.int64)
@@ -739,7 +885,7 @@ class FibecFed:
         masks), so repeated ``init_phase`` calls are safe.
         """
         per_client = [self._rank_mask(int(r)) for r in self.client_ranks]
-        if self._stacked_engine:
+        if self._stacked_engine and not self._oocore:
             C_stack = self._sample_valid.shape[0]
             padded = per_client + [per_client[0]] * (C_stack - len(per_client))
             stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *padded)
@@ -771,7 +917,7 @@ class FibecFed:
         residuals live on may have changed."""
         if self.compression is None:
             return
-        if self._stacked_engine:
+        if self._stacked_engine and not self._oocore:
             if self.compression.error_feedback:
                 self._stacked_residual = jax.tree.map(
                     jnp.zeros_like, self._stacked_lora
@@ -796,6 +942,37 @@ class FibecFed:
             for client in self.clients:
                 client.ef_residual = jax.tree.map(jnp.zeros_like, self._init_lora)
 
+    def _probe_sensitivity(self, fl):
+        """Per-client layer-sensitivity probe (Eq. 9-10) + lossless-fraction
+        estimation, aggregated server-side (Eq. 11). Returns
+        ``(global_scores, fractions, ns)``."""
+        sensitivity = self._sensitivity_fn()
+        layer_scores_all, fractions, ns = [], [], []
+        for ci, client in enumerate(self.clients):
+            ids = client.batches[int(client.order[0])]
+            batch = self._client_batch(client, ids)
+            scores = sensitivity(self.params, client.lora, batch)
+            client.layer_scores = np.asarray(scores)
+            layer_scores_all.append(client.layer_scores)
+            ns.append(client.n)
+
+            # --- lossless fraction (only if not overridden; costly) ---
+            if fl.gal_fraction is None or fl.sparse_ratio is None:
+                client.lossless_fraction = galmod.lossless_rank_fraction(
+                    self.loss_fn,
+                    self.params,
+                    client.lora,
+                    batch,
+                    jax.random.fold_in(self.key, 1000 + ci),
+                    iters=fl.lanczos_iters,
+                )
+            fractions.append(
+                client.lossless_fraction
+                if fl.gal_fraction is None
+                else fl.gal_fraction
+            )
+        return galmod.aggregate_layer_scores(layer_scores_all, ns), fractions, ns
+
     def init_phase(self, *, probe_batches: int = 1) -> None:
         with self.tel.span("init_phase", cat="fl", track="server"):
             self._init_phase_body(probe_batches=probe_batches)
@@ -809,34 +986,27 @@ class FibecFed:
 
         # --- layer sensitivity scores (Eq. 9-10) + lossless fractions ---
         with self.tel.span("sensitivity", cat="fl", track="server"):
-            sensitivity = self._sensitivity_fn()
-            layer_scores_all, fractions, ns = [], [], []
-            for ci, client in enumerate(self.clients):
-                ids = client.batches[int(client.order[0])]
-                batch = self._client_batch(client, ids)
-                scores = sensitivity(self.params, client.lora, batch)
-                client.layer_scores = np.asarray(scores)
-                layer_scores_all.append(client.layer_scores)
-                ns.append(client.n)
-
-                # --- lossless fraction (only if not overridden; costly) ---
-                if fl.gal_fraction is None or fl.sparse_ratio is None:
-                    client.lossless_fraction = galmod.lossless_rank_fraction(
-                        self.loss_fn,
-                        self.params,
-                        client.lora,
-                        batch,
-                        jax.random.fold_in(self.key, 1000 + ci),
-                        iters=fl.lanczos_iters,
-                    )
-                fractions.append(
-                    client.lossless_fraction
-                    if fl.gal_fraction is None
-                    else fl.gal_fraction
-                )
+            if (
+                self._oocore
+                and fl.gal_fraction is not None
+                and fl.sparse_ratio is not None
+                and self.gal_mode in ("full", "random")
+            ):
+                # population-scale fast path: with both fractions pinned and
+                # a score-blind GAL mode, the per-client sensitivity probe
+                # could only feed scores nobody reads — skip it instead of
+                # faulting every cold client in. Sample counts come from the
+                # store (one cheap pass, no state materialization); the GAL
+                # selection below is identical to what an in-memory run with
+                # this config computes (n_star depends only on the pinned
+                # fractions, and full/random ignore the scores).
+                global_scores = np.zeros(lora_num_logical_layers(self.cfg))
+                ns = [int(n) for n in self.store.sample_counts()]
+                fractions = [fl.gal_fraction] * len(ns)
+            else:
+                global_scores, fractions, ns = self._probe_sensitivity(fl)
 
         # --- server: GAL selection (lines 6-7) ---
-        global_scores = galmod.aggregate_layer_scores(layer_scores_all, ns)
         L = len(global_scores)
         n_star = galmod.gal_layer_count(fractions, ns, L, fl.mu_global_local)
         self.gal_layers = self._select_layers(global_scores, n_star)
@@ -1016,7 +1186,7 @@ class FibecFed:
             m.gauge("jit.client_train_traces").set(
                 eng.trace_cache_size(self._client_train_fn())
             )
-        elif self._stacked_engine:
+        elif self._stacked_engine and not self._oocore:
             m.gauge("jit.round_fn_traces").set(
                 eng.trace_cache_size(self._round_fn())
             )
@@ -1026,6 +1196,8 @@ class FibecFed:
         if self._async:
             return self._run_round_async(t, lr)
         if self._stacked_engine:
+            if self._oocore:
+                return self._run_round_cohort(t, lr)
             return self._run_round_vectorized(t, lr)
         return self._run_round_loop(t, lr)
 
@@ -1190,6 +1362,126 @@ class FibecFed:
             "padded_steps": float(batch_idx.shape[1]),
         }
 
+    def _run_round_cohort(
+        self, t: int, lr: Optional[float] = None
+    ) -> Dict[str, float]:
+        """The vectorized round against an out-of-core client store.
+
+        Same cohort draw, curriculum plan, FedAvg weighting, and comm
+        accounting as ``_run_round_vectorized`` — but only the sampled
+        cohort's states are fetched (pinned against eviction for the round),
+        host-stacked to a leading k axis together with their streamed data
+        grid (``stack_cohort``), trained by the cohort round program, and
+        unstacked back into the store. Peak memory scales with the cohort
+        and the store's hot set, never the population.
+        """
+        fl = self.fl
+        lr = fl.learning_rate if lr is None else lr
+        C = len(self.clients)
+        k = min(fl.devices_per_round, C)
+        chosen = self.rng.choice(C, k, replace=False)
+        cohort = [int(ci) for ci in chosen]
+        for ci in cohort:
+            self.store.pin(ci)
+        try:
+            states = [self.clients[ci] for ci in cohort]
+            orders = [s.order for s in states]
+            batch_idx, step_valid = curr.step_plan(
+                self.schedule, t, orders, fl.local_epochs
+            )
+            w = np.asarray([s.n for s in states], np.float64)
+            w = (w / w.sum()).astype(np.float32)
+
+            # the data grid is streamed per round: bucket the batch axis so
+            # rounds with the same (k, NB, S) shape share a compiled program
+            nb = max(len(s.batches) for s in states)
+            grid = stack_cohort(
+                [self.store.client_data(ci) for ci in cohort],
+                fl.batch_size,
+                pad_batches_to=bucket_size(nb),
+            )
+            data = {k_: jnp.asarray(v) for k_, v in grid.data.items()}
+            sv = jnp.asarray(grid.sample_valid)
+
+            def _stack(trees):
+                return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+            cohort_lora = _stack([s.lora for s in states])
+            cohort_opt = _stack([s.opt_state for s in states])
+            use_mask = states[0].neuron_mask is not None
+            mask_arg = (
+                _stack([s.neuron_mask for s in states])
+                if use_mask
+                else jnp.zeros(())
+            )
+            round_fn = self._cohort_round_fn(use_mask)
+            args = (
+                self.params,
+                self.global_lora,
+                cohort_lora,
+                cohort_opt,
+                mask_arg,
+                self._gal_mask_tree,
+                data,
+                sv,
+                jnp.asarray(batch_idx),
+                jnp.asarray(step_valid),
+                jnp.asarray(w),
+                jnp.float32(lr),
+            )
+            new_res = None
+            if self.compression is None:
+                self.global_lora, new_lora, new_opt, losses = round_fn(*args)
+            else:
+                ef = self.compression.error_feedback
+                res_arg = (
+                    _stack([s.ef_residual for s in states]) if ef else jnp.zeros(())
+                )
+                cm_arg = (
+                    _stack([self._comp_mask(ci) for ci in cohort])
+                    if self._compress_static()["has_comp_mask"]
+                    else jnp.zeros(())
+                )
+                self.global_lora, new_lora, new_opt, losses, res_out = round_fn(
+                    *args, res_arg, cm_arg
+                )
+                if ef:
+                    new_res = res_out
+            for i, (ci, s) in enumerate(zip(cohort, states)):
+                s.lora = jax.tree.map(lambda x, i=i: x[i], new_lora)
+                s.opt_state = jax.tree.map(lambda x, i=i: x[i], new_opt)
+                if new_res is not None:
+                    s.ef_residual = jax.tree.map(lambda x, i=i: x[i], new_res)
+                self.store.put(ci, s)
+        finally:
+            for ci in cohort:
+                self.store.unpin(ci)
+
+        losses = np.asarray(losses)  # (S, k)
+        valid = step_valid.T
+        mean_loss = float(np.sum(losses * valid) / max(np.sum(valid), 1.0))
+
+        self.last_round_info = {
+            "chosen": np.asarray(chosen),
+            "client_steps": step_valid.sum(axis=1).astype(np.int64),
+        }
+        total, up = self._gal_bytes(chosen)
+        self.comm_bytes_per_round.append(total)
+        self.comm_upload_bytes_per_round.append(up)
+        return {
+            "loss": mean_loss,
+            "selected_batches": float(
+                np.mean(
+                    [
+                        len(curr.selected_batch_ids(self.schedule, t, o))
+                        for o in orders
+                    ]
+                )
+            ),
+            "comm_bytes": float(self.comm_bytes_per_round[-1]),
+            "padded_steps": float(batch_idx.shape[1]),
+        }
+
     # ------------------------------------------------------------------
     # async engine (event-driven, straggler-aware)
     # ------------------------------------------------------------------
@@ -1254,7 +1546,36 @@ class FibecFed:
             n_sel = len(sel) if cap is None else min(cap, len(sel))
             return n_sel * fl.local_epochs
 
+        def _client_grid_row(ci: int, client: ClientState):
+            """One client's padded (NB, B, ...) data grid row + valid mask.
+
+            In-memory engines pre-stack the whole population once; the
+            out-of-core store streams the dispatched client's shard through
+            ``stack_cohort`` on demand (batch axis pow2-bucketed, so the
+            per-client train program compiles once per bucket, and padded
+            rows are never indexed — ``batch_idx`` only holds real ids).
+            """
+            if not self._oocore:
+                return (
+                    {k_: v[ci] for k_, v in self._stack_data.items()},
+                    self._sample_valid[ci],
+                )
+            row = stack_cohort(
+                [self.store.client_data(ci)],
+                fl.batch_size,
+                pad_batches_to=bucket_size(len(client.batches)),
+            )
+            return (
+                {k_: jnp.asarray(v[0]) for k_, v in row.data.items()},
+                jnp.asarray(row.sample_valid[0]),
+            )
+
         def train(ci: int, t: int, version: int) -> ClientUpdate:
+            # pinned while in flight / buffered: the async aggregator may
+            # hold this client's payload across several flushes, and eviction
+            # churn on active clients would thrash the hot set (the runner
+            # re-syncs pins to in-flight|buffered after every merge)
+            self.store.pin(ci)
             client = self.clients[ci]
             n_sel = len(curr.selected_batch_ids(self.schedule, t, client.order))
             cap = _cap(ci, n_sel)
@@ -1263,21 +1584,38 @@ class FibecFed:
                 max_selected=None if cap is None else [cap],
             )
             mask_arg = client.neuron_mask if use_mask else jnp.zeros(())
+            cdata, csv = _client_grid_row(ci, client)
             pulled = self._global.front  # the version this client pulls
+            lora_arg, opt_arg = client.lora, client.opt_state
+            if self._oocore:
+                # Out of core, a client's state buffers chain directly from
+                # one train call's (donation-aliased) outputs into the next
+                # call's donated inputs — the only such lineage in the repo
+                # (cohort rounds re-stack state into fresh buffers every
+                # round). On XLA:CPU with a warm persistent compilation
+                # cache that chain corrupts neighbouring live buffers
+                # (observed: the pulled global going non-finite one round
+                # later), so break it: donate fresh copies instead. The
+                # copies are rank-r per-client trees — noise next to the
+                # train step — and the executable still recycles them via
+                # its input/output aliases.
+                lora_arg = jax.tree.map(jnp.copy, lora_arg)
+                opt_arg = jax.tree.map(jnp.copy, opt_arg)
             new_lora, new_opt, losses = train_fn(
                 self.params,
                 pulled,
-                client.lora,  # donated: the client trains in place
-                client.opt_state,  # donated
+                lora_arg,  # donated: the client trains in place
+                opt_arg,  # donated
                 mask_arg,
                 self._gal_mask_tree,
-                {k_: v[ci] for k_, v in self._stack_data.items()},
-                self._sample_valid[ci],
+                cdata,
+                csv,
                 jnp.asarray(batch_idx[0]),
                 jnp.asarray(step_valid[0]),
                 jnp.float32(lr),
             )
             client.lora, client.opt_state = new_lora, new_opt
+            self.store.put(ci, client)
             # delta against the pulled version, extracted now — by merge
             # time this version may already be retired from the double
             # buffer (staleness >= 2), so it cannot be recovered later
@@ -1338,15 +1676,38 @@ class FibecFed:
         else:
             payloads = [u.lora for u in result.updates]
             merge = self._merge_fn()
-        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *payloads)
+        if self._hierarchy is not None:
+            # two-tier topology: edges reduce their regions' payloads to
+            # partial weighted sums, the server merges the summaries with
+            # unit weights — bit-exact to the flat merge at one edge, equal
+            # up to float reassociation otherwise (see federated.hierarchy)
+            from repro.federated.hierarchy import build_edge_summary_fn, edge_reduce
+
+            summary_fn = _memo(("edge_summary",), build_edge_summary_fn)
+            stacked, wts = edge_reduce(
+                summary_fn,
+                payloads,
+                np.asarray(result.weights),
+                [u.client for u in result.updates],
+                len(self.clients),
+                self._hierarchy.num_edges,
+            )
+        else:
+            stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *payloads)
+            wts = jnp.asarray(result.weights, jnp.float32)
         new_global = merge(
             self._global.front,
             self._gal_mask_tree,
             stacked,
-            jnp.asarray(result.weights, jnp.float32),
+            wts,
         )
         self._global.publish(new_global)
         self.global_lora = self._global.front
+        # release merged/dropped clients for eviction; whoever is still in
+        # flight or sitting in the next buffer stays pinned
+        self.store.sync_pins(
+            set(sched.in_flight) | {u.client for u in sched.buffer}
+        )
 
         num = den = 0.0
         for u in result.updates:

@@ -1,3 +1,3 @@
 from repro.data.synthetic import make_keyword_task, SyntheticTask
 from repro.data.partition import dirichlet_partition
-from repro.data.pipeline import batch_iterator, make_batches
+from repro.data.pipeline import batch_iterator, make_batches, stack_clients, stack_cohort

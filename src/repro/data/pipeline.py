@@ -79,26 +79,43 @@ class ClientStack:
         return self.sample_valid.shape[1]
 
 
-def stack_clients(
+def stack_cohort(
     client_data: Sequence[Dict[str, np.ndarray]],
     batch_size: int,
     *,
+    pad_batches_to: Optional[int] = None,
     pad_clients_to: Optional[int] = None,
 ) -> ClientStack:
-    """Build the padded fixed-shape stack the vectorized engine trains on.
+    """Build the padded fixed-shape stack for a *cohort* of clients.
 
-    ``pad_clients_to`` pads the *client* axis up to that count with dummy
-    rows (client 0's data, all-zero ``sample_valid``, zero ``n_batches`` /
-    ``n_samples``) so the stack divides evenly across a device mesh's client
-    groups (``launch.mesh.num_client_groups``). Padding rows sit after all
-    real clients; training on one is an exact no-op.
+    This is the streaming counterpart of :func:`stack_clients`: callers pass
+    just the sampled cohort's shards (any iterable — e.g. lazy fetches from
+    an out-of-core client store), so peak memory scales with the cohort, not
+    the population. ``pad_batches_to`` pads the batch axis up to a fixed
+    grid height (extra rows are fully invalid no-ops) so every round's
+    cohort stack shares one shape — and therefore one compiled round
+    program — regardless of which clients were sampled. ``pad_clients_to``
+    pads the *client* axis up to that count with dummy rows (client 0's
+    data, all-zero ``sample_valid``, zero ``n_batches`` / ``n_samples``) so
+    the stack divides evenly across a device mesh's client groups
+    (``launch.mesh.num_client_groups``). Padding rows sit after all real
+    clients; training on one is an exact no-op.
     """
     per_client = []
     for cd in client_data:
         n = len(next(iter(cd.values())))
         ids, valid = pad_batches(make_batches(n, batch_size), batch_size)
         per_client.append((cd, n, ids, valid))
+    if not per_client:
+        raise ValueError("stack_cohort needs at least one client")
     nb_max = max(ids.shape[0] for _, _, ids, _ in per_client)
+    if pad_batches_to is not None:
+        if pad_batches_to < nb_max:
+            raise ValueError(
+                f"pad_batches_to={pad_batches_to} < largest cohort client's"
+                f" {nb_max} batches"
+            )
+        nb_max = pad_batches_to
 
     keys = list(per_client[0][0].keys())
     data = {}
@@ -129,6 +146,20 @@ def stack_clients(
         n_batches=n_batches,
         n_samples=n_samples,
     )
+
+
+def stack_clients(
+    client_data: Sequence[Dict[str, np.ndarray]],
+    batch_size: int,
+    *,
+    pad_clients_to: Optional[int] = None,
+) -> ClientStack:
+    """Build the padded fixed-shape stack the vectorized engine trains on.
+
+    Stacks the *whole* population eagerly; see :func:`stack_cohort` for the
+    per-round streaming variant used by the out-of-core client store.
+    """
+    return stack_cohort(client_data, batch_size, pad_clients_to=pad_clients_to)
 
 
 def batch_iterator(

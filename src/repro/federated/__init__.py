@@ -8,6 +8,7 @@ from repro.federated.async_agg import (
     adapted_step_count,
     cohort_weights,
     delta_weights,
+    resolve_server_lr,
     staleness_weights,
 )
 from repro.federated.baselines import BASELINES, make_runner, run_experiment
@@ -24,3 +25,10 @@ from repro.federated.hetero import (
     get_scenario,
     sync_round_time,
 )
+from repro.federated.hierarchy import (
+    HierarchyConfig,
+    edge_assignments,
+    edge_reduce,
+    get_hierarchy,
+)
+from repro.federated.store import ClientStore, InMemoryStore, OutOfCoreStore

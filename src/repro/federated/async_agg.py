@@ -95,6 +95,54 @@ T = TypeVar("T")
 
 MERGE_MODES = ("buffered", "delta")
 PACE_MODES = ("scenario", "observed")
+SERVER_LR_KINDS = ("constant", "inv_sqrt", "exp")
+
+
+def resolve_server_lr(spec: Any, t: int) -> float:
+    """Evaluate a ``server_lr`` spec at merge index ``t`` (published merges).
+
+    ``spec`` is a plain float (constant — the exact pre-schedule behavior),
+    a callable ``t -> eta``, or a ``(kind, base, decay)`` tuple with kind
+    ``"constant"`` (``base``), ``"inv_sqrt"`` (``base / sqrt(1 + decay*t)``,
+    the classic asynchronous-SGD staleness-robust decay), or ``"exp"``
+    (``base * exp(-decay * t)``). A float spec returns itself unchanged, so
+    the constant path is bit-identical to the unscheduled server lr.
+    """
+    if callable(spec):
+        return float(spec(t))
+    if isinstance(spec, (tuple, list)):
+        kind, base, decay = spec
+        if kind == "constant":
+            return float(base)
+        if kind == "inv_sqrt":
+            return float(base / np.sqrt(1.0 + decay * t))
+        if kind == "exp":
+            return float(base * np.exp(-decay * t))
+        raise ValueError(f"unknown server_lr schedule kind {kind!r}")
+    return float(spec)
+
+
+def _validate_server_lr(spec: Any) -> None:
+    if callable(spec):
+        return
+    if isinstance(spec, (tuple, list)):
+        if len(spec) != 3:
+            raise ValueError(
+                "server_lr schedule spec must be (kind, base, decay)"
+            )
+        kind, base, decay = spec
+        if kind not in SERVER_LR_KINDS:
+            raise ValueError(
+                f"server_lr schedule kind must be one of {SERVER_LR_KINDS}, "
+                f"got {kind!r}"
+            )
+        if base <= 0.0:
+            raise ValueError("server_lr schedule base must be > 0")
+        if decay < 0.0:
+            raise ValueError("server_lr schedule decay must be >= 0")
+        return
+    if spec <= 0.0:
+        raise ValueError("server_lr must be > 0")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -121,13 +169,30 @@ class AsyncAggConfig:
     sample weights, NOT renormalized — a stale flush genuinely moves the
     global less. ``server_lr`` is eta, the server learning rate of the
     delta merge (ignored in buffered mode); at ``server_lr=1`` and
-    staleness 0 the two modes coincide exactly.
+    staleness 0 the two modes coincide exactly. Besides a float constant,
+    ``server_lr`` accepts a schedule ``eta(t)`` over published merges: a
+    callable ``t -> eta`` or a ``(kind, base, decay)`` tuple
+    (:func:`resolve_server_lr` — ``"constant"`` / ``"inv_sqrt"`` /
+    ``"exp"``), evaluated at each flush's pre-publish version. A float (or
+    ``("constant", base, 0.0)``) is bit-identical to the unscheduled rate.
 
     Adaptive policies (each an exact no-op at its default):
 
     ``staleness_cutoff`` — discard buffered updates strictly older than this
     many merges at flush time (an update exactly at the bound still
     merges); their clients become dispatchable again. ``None`` disables.
+    ``predict_staleness`` — skip *dispatching* clients predicted to exceed
+    the cutoff, rather than paying their round trip and discarding the
+    result at flush time: a client's predicted completion time (its
+    per-step completion-time EMA — the same signal as
+    ``pace_mode="observed"`` — times its planned step count) divided by
+    the observed merge-interval EMA estimates the staleness its update
+    would arrive with. Clients with no completions yet (no EMA entry), or
+    before the first flush establishes a merge cadence, are never
+    skipped, so the first waves are identical with the knob on or off;
+    with every client predicted over the bound the filter backs off to the
+    unfiltered pool rather than stalling dispatch. Requires
+    ``staleness_cutoff``; exact no-op at the default ``False``.
     ``adapt_buffer`` — adapt the flush threshold K to the observed
     completion rate after every merge (see :func:`adapted_buffer_size`),
     clipped to ``[min_buffer_size, max_buffer_size]`` (``max_buffer_size``
@@ -163,8 +228,9 @@ class AsyncAggConfig:
     concurrency: Optional[int] = None
     staleness_power: float = 0.5
     merge_mode: str = "buffered"
-    server_lr: float = 1.0
+    server_lr: Any = 1.0
     staleness_cutoff: Optional[int] = None
+    predict_staleness: bool = False
     adapt_buffer: bool = False
     min_buffer_size: int = 1
     max_buffer_size: Optional[int] = None
@@ -189,10 +255,14 @@ class AsyncAggConfig:
             raise ValueError(
                 f"merge_mode must be one of {MERGE_MODES}, got {self.merge_mode!r}"
             )
-        if self.server_lr <= 0.0:
-            raise ValueError("server_lr must be > 0")
+        _validate_server_lr(self.server_lr)
         if self.staleness_cutoff is not None and self.staleness_cutoff < 0:
             raise ValueError("staleness_cutoff must be >= 0")
+        if self.predict_staleness and self.staleness_cutoff is None:
+            raise ValueError(
+                "predict_staleness requires staleness_cutoff (there is no "
+                "bound to predict against)"
+            )
         if self.min_buffer_size < 1:
             raise ValueError("min_buffer_size must be >= 1")
         if self.max_buffer_size is not None and (
@@ -462,6 +532,7 @@ class AsyncScheduler:
         self.merge_mode = cfg.merge_mode
         self.server_lr = cfg.server_lr
         self.staleness_cutoff = cfg.staleness_cutoff
+        self.predict_staleness = cfg.predict_staleness
         self.adapt_buffer = cfg.adapt_buffer
         self.base_buffer_size = self.buffer_size
         self.min_buffer_size = cfg.min_buffer_size
@@ -490,6 +561,10 @@ class AsyncScheduler:
         self._stale_bytes_since_flush = 0
         self._stale_upload_bytes_since_flush = 0
         self._rate_ema: Optional[float] = None
+        # merge-cadence estimate for dispatch-time staleness prediction:
+        # EMA (momentum 0.5) of virtual time between successful flushes
+        self._merge_interval_ema: Optional[float] = None
+        self._last_flush_clock = 0.0
         self._heap: List[_Event] = []
         self._seq = itertools.count()
         self.pace_mode = cfg.pace_mode
@@ -521,12 +596,42 @@ class AsyncScheduler:
         busy = self.in_flight | {u.client for u in self.buffer}
         return [c for c in range(self.num_clients) if c not in busy]
 
+    def predicted_staleness(self, client: int, n_steps: int) -> Optional[float]:
+        """Merges the global is predicted to absorb while ``client`` runs
+        ``n_steps`` — its per-step completion-time EMA times the step count,
+        divided by the observed merge-interval EMA. ``None`` when there is
+        no evidence yet (client never completed, or no flush has
+        established a merge cadence)."""
+        t_step = self._obs_step_time.get(client)
+        interval = self._merge_interval_ema
+        if t_step is None or interval is None or interval <= 0.0:
+            return None
+        return (t_step * max(1, n_steps)) / interval
+
+    def _predict_filter(self, avail: List[int], round_t: int, plan: Callable) -> List[int]:
+        """Dispatch-time staleness prediction: drop clients whose update is
+        predicted to arrive past the cutoff (it would only be discarded at
+        flush time after paying the full round trip). Evidence-free clients
+        pass; an all-skipped pool backs off to the unfiltered one so
+        dispatch never stalls."""
+        keep = []
+        for ci in avail:
+            tau_hat = self.predicted_staleness(ci, plan(ci, round_t))
+            if tau_hat is not None and tau_hat > self.staleness_cutoff:
+                if self.tel.enabled:
+                    self.tel.metrics.counter("async.predicted_stale_skips").inc()
+                continue
+            keep.append(ci)
+        return keep or avail
+
     def _dispatch(self, round_t: int, plan: Callable, train: Callable) -> int:
         """Top the in-flight set up to ``concurrency``; returns #dispatched."""
         want = self.concurrency - len(self.in_flight)
         if want <= 0:
             return 0
         avail = self._available()
+        if self.predict_staleness and avail:
+            avail = self._predict_filter(avail, round_t, plan)
         count = min(want, len(avail))
         if count <= 0:
             return 0
@@ -704,15 +809,26 @@ class AsyncScheduler:
             [self.version - u.pulled_version for u in updates], np.int64
         )
         if self.merge_mode == "delta":
+            # schedule evaluated at the published-merge index: merge t sees
+            # eta(t), so a constant spec reproduces the fixed-eta run bit
+            # for bit
+            eta = resolve_server_lr(self.server_lr, self.version)
             weights = delta_weights(
                 [u.n_samples for u in updates], staleness, self.staleness_power,
-                self.server_lr,
+                eta,
             )
         else:
             weights = staleness_weights(
                 [u.n_samples for u in updates], staleness, self.staleness_power
             )
         self.version += 1
+        interval = self.clock - self._last_flush_clock
+        self._last_flush_clock = self.clock
+        self._merge_interval_ema = (
+            interval
+            if self._merge_interval_ema is None
+            else 0.5 * (self._merge_interval_ema + interval)
+        )
         self.last_merge_weights = weights
         dropped, self._dropped_since_flush = self._dropped_since_flush, 0
         stale_dropped, self._stale_since_flush = self._stale_since_flush, 0

@@ -57,6 +57,8 @@ def make_runner(
     async_cfg: Any = None,
     compression: Any = None,
     client_ranks: Any = None,
+    store: Any = None,
+    hierarchy: Any = None,
     telemetry: Any = None,
 ) -> FibecFed:
     """Build a :class:`FibecFed` runner from a named baseline preset.
@@ -87,6 +89,11 @@ def make_runner(
         comm accounting; ``None`` is an exact no-op.
       client_ranks: per-client effective LoRA rank (resource-adaptive
         rank heterogeneity); ``None`` = full rank everywhere.
+      store: client-state ownership (``repro.federated.store``); ``None``
+        binds the default in-memory store, an ``OutOfCoreStore`` bounds
+        resident state by its hot-set size for population-scale runs.
+      hierarchy: two-tier edge→server aggregation for ``engine="async"``
+        (an int edge count or ``HierarchyConfig``); ``None`` merges flat.
       telemetry: optional ``repro.obs.Telemetry`` recording round spans and
         the metrics registry; ``None`` installs the no-op recorder
         (bit-identical run).
@@ -105,7 +112,8 @@ def make_runner(
         model, loss_fn, fl, client_data, seed=seed, optimizer=optimizer,
         fused_optimizer=fused_optimizer, engine=engine, mesh=mesh,
         scenario=scenario, async_cfg=async_cfg, compression=compression,
-        client_ranks=client_ranks, telemetry=telemetry, **preset
+        client_ranks=client_ranks, store=store, hierarchy=hierarchy,
+        telemetry=telemetry, **preset
     )
 
 

@@ -1,0 +1,125 @@
+"""Two-tier (edge -> server) aggregation for cross-device populations.
+
+At 10^4+ clients a single server cannot terminate every upload; real
+cross-device systems interpose regional *edge aggregators*: each edge
+reduces its region's client updates to one summary, and the server merges
+only the E edge summaries. This module implements that topology over the
+async engine's buffer flush while preserving the flat merge's numerics:
+
+* clients are assigned to edges in contiguous blocks
+  (:func:`edge_assignments` — client ``ci`` belongs to edge
+  ``ci * E // C``, the "region = id range" placement);
+* each edge computes the *partial weighted sum* of its buffered payloads,
+  ``s_e = sum_{i in e} w_i * x_i`` (:func:`build_edge_summary_fn`, one
+  jitted contraction per flush), where ``w_i`` are exactly the flat merge's
+  weights — normalized staleness-discounted FedAvg weights in buffered
+  mode, absolute server-lr-scaled rates in delta mode;
+* the server merges the stacked summaries with *unit* edge weights through
+  the existing merge programs (``engine.gal_weighted_merge`` /
+  ``gal_delta_merge``): ``sum_e 1.0 * s_e = sum_i w_i * x_i``, so the
+  two-tier result equals the flat merge up to float reassociation across
+  edges — and with one edge it is *bit-exact* (the edge summary is the
+  identical tensordot the flat merge would run, and contracting a single
+  summary with weight 1.0 is exact). CI enforces both
+  (``tests/test_engine_equivalence.py``).
+
+Comm accounting is unchanged by the topology: each client's round trip is
+charged per completion exactly as in the flat configuration (the edge->
+server legs aggregate E summaries regardless of cohort size and are not
+part of the paper's per-client accounting).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class HierarchyConfig:
+    """Topology of the two-tier aggregation.
+
+    ``num_edges=1`` is the degenerate single-aggregator topology — the
+    edge tier reduces the whole buffer and the server applies it with
+    weight 1.0, bit-exact to the flat merge.
+    """
+
+    num_edges: int = 1
+
+    def __post_init__(self):
+        if self.num_edges < 1:
+            raise ValueError("num_edges must be >= 1")
+
+
+def get_hierarchy(spec: Any) -> HierarchyConfig:
+    """Coerce ``None`` / int / HierarchyConfig to a HierarchyConfig."""
+    if spec is None:
+        return HierarchyConfig()
+    if isinstance(spec, HierarchyConfig):
+        return spec
+    if isinstance(spec, int):
+        return HierarchyConfig(num_edges=spec)
+    raise TypeError(
+        f"hierarchy must be an int or HierarchyConfig, got {type(spec)!r}"
+    )
+
+
+def edge_assignments(num_clients: int, num_edges: int) -> np.ndarray:
+    """(num_clients,) edge id per client: contiguous blocks, sizes within 1.
+
+    ``edge(ci) = ci * E // C`` — the standard balanced block partition (the
+    first ``C mod E`` edges get the extra client). More edges than clients
+    leaves the trailing edges empty, which the merge simply skips.
+    """
+    if num_clients < 1 or num_edges < 1:
+        raise ValueError("num_clients and num_edges must be >= 1")
+    return (np.arange(num_clients, dtype=np.int64) * num_edges) // num_clients
+
+
+def build_edge_summary_fn():
+    """Jitted edge-tier reduction: ``(stacked payloads (k_e, ...), weights
+    (k_e,)) -> partial weighted sum`` per leaf. The same ``tensordot``
+    contraction the flat merge runs over the full buffer, restricted to one
+    edge's slice — which is what makes the one-edge topology bit-exact."""
+    return jax.jit(
+        lambda stacked, w: jax.tree.map(
+            lambda x: jnp.tensordot(w, x, axes=1), stacked
+        )
+    )
+
+
+def edge_reduce(
+    summary_fn: Any,
+    payloads: Sequence[Any],
+    weights: np.ndarray,
+    clients: Sequence[int],
+    num_clients: int,
+    num_edges: int,
+) -> Tuple[Any, jnp.ndarray]:
+    """Reduce a flush's payloads through the edge tier.
+
+    Returns ``(stacked_summaries (E', ...), edge_weights (E',) of ones)``
+    ready for the existing server merge programs; ``E'`` counts the edges
+    with at least one buffered completion (empty edges contribute nothing).
+    ``weights`` are the flat merge weights (already staleness-discounted
+    and, in buffered mode, normalized); they are cast to f32 exactly as the
+    flat path casts before its contraction.
+    """
+    if len(payloads) != len(clients) or len(payloads) != len(weights):
+        raise ValueError("payloads, weights, and clients must align")
+    edges = edge_assignments(num_clients, num_edges)
+    w32 = np.asarray(weights, np.float32)
+    summaries: List[Any] = []
+    for e in range(num_edges):
+        idx = [i for i, ci in enumerate(clients) if edges[int(ci)] == e]
+        if not idx:
+            continue
+        stacked = jax.tree.map(
+            lambda *xs: jnp.stack(xs), *[payloads[i] for i in idx]
+        )
+        summaries.append(summary_fn(stacked, jnp.asarray(w32[idx])))
+    stacked_s = jax.tree.map(lambda *xs: jnp.stack(xs), *summaries)
+    return stacked_s, jnp.ones(len(summaries), jnp.float32)

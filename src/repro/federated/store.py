@@ -1,0 +1,376 @@
+"""Pluggable client-state ownership: the population lives behind a store.
+
+Every engine used to assume the entire client population resides in (device)
+memory: ``FibecFed.__init__`` eagerly built one ``ClientState`` per client
+and the vectorized engines materialized population-sized stacked pytrees.
+That caps the simulation at benchmark-toy populations, while the paper's
+cross-device regime assumes 10^4-10^6 clients of which only a small cohort
+is active per round. This module moves client-state ownership behind a
+:class:`ClientStore` protocol:
+
+* :class:`InMemoryStore` (default) — the current behavior, verbatim: all
+  states built eagerly at bind time, stacked trees owned here, every lookup
+  a list index. CI enforces bit-identical numerics against the pre-store
+  engines (``tests/test_engine_equivalence.py``).
+* :class:`OutOfCoreStore` — an LRU-resident *hot set* of at most
+  ``hot_slots`` client states; cold clients spill to one flat-npz file each
+  (``repro.checkpoint.save_tree`` — the same atomic tmp+rename writer as
+  run checkpoints) and small host metadata (sample counts, curriculum
+  order, difficulty, layer scores) stays resident. Only the round's cohort
+  is ever materialized, so peak memory is bounded by the hot-set size, not
+  the population. Clients in flight or buffered by the async aggregator can
+  be *pinned* to exempt them from eviction.
+
+The store is deliberately decoupled from ``FibecFed``: it never imports the
+runner. The runner hands :meth:`ClientStore.bind` two factories — one for a
+fresh fully-initialized state, one for a "shell" with the spillable device
+fields unset — plus the raw ``client_data`` sequence, and the store treats
+states as opaque objects with a known set of spillable attribute names
+(:data:`SPILL_FIELDS`).
+
+Spill format: one ``client_<ci>.npz`` per cold client holding the non-empty
+device trees; a per-client resident ``meta`` dict records which fields were
+``None`` / empty / spilled (an empty dict — e.g. momentum-free SGD optimizer
+state — flattens to nothing, so presence must be recorded out of band) plus
+the host metadata. Telemetry (when enabled) traces ``store_fetch`` /
+``store_evict`` / ``store_flush`` spans and keeps hit/miss/eviction
+counters, so cache behavior at population scale is visible in traces.
+"""
+from __future__ import annotations
+
+import collections
+import os
+from typing import Any, Callable, Dict, List, Optional, Protocol, Sequence, Set
+
+import numpy as np
+
+from repro.checkpoint import clean_stale_tmp, load_tree, save_tree
+from repro.obs import ensure as ensure_telemetry
+
+# ClientState attributes holding (potentially device-resident) pytrees that
+# spill to the per-client npz on eviction. ``_lora`` is the concrete LoRA
+# slot behind the ``lora`` property — out-of-core states are always concrete
+# (never lazy views into a population stack, which cannot exist out of core).
+SPILL_FIELDS = ("_lora", "opt_state", "fim", "neuron_mask", "ef_residual")
+
+# Small host-side attributes kept resident for every client (hot or cold):
+# sizes, curriculum order/difficulty, and the init-phase scalars. Cheap at
+# population scale and needed without materializing the device state.
+META_FIELDS = (
+    "n",
+    "batches",
+    "order",
+    "difficulty",
+    "layer_scores",
+    "lossless_fraction",
+)
+
+
+class ClientStore(Protocol):
+    """What the engines need from client-state storage.
+
+    ``get`` returns the authoritative, mutable state object for a client —
+    callers mutate it in place (and may call ``put`` to make the write-back
+    explicit). ``pin``/``sync_pins`` exempt clients from eviction while the
+    async aggregator has them in flight or buffered. ``out_of_core`` tells
+    the runner which code paths apply (population-stacked programs need an
+    in-memory store).
+    """
+
+    out_of_core: bool
+    num_clients: int
+
+    def bind(
+        self,
+        *,
+        client_data: Sequence[Dict[str, np.ndarray]],
+        make_state: Callable[[int], Any],
+        make_shell: Callable[[int], Any],
+        telemetry: Any = None,
+    ) -> None: ...
+
+    def get(self, ci: int) -> Any: ...
+
+    def put(self, ci: int, state: Any) -> None: ...
+
+    def client_data(self, ci: int) -> Dict[str, np.ndarray]: ...
+
+    def sample_count(self, ci: int) -> int: ...
+
+    def pin(self, ci: int) -> None: ...
+
+    def unpin(self, ci: int) -> None: ...
+
+    def sync_pins(self, pinned: Set[int]) -> None: ...
+
+    def flush(self) -> None: ...
+
+
+class ClientsView(Sequence):
+    """Sequence facade over a store: ``runner.clients[ci]`` / iteration keep
+    working for every engine, with lookups routed through the store (so an
+    out-of-core store can fault states in lazily)."""
+
+    def __init__(self, store: "ClientStore"):
+        self._store = store
+
+    def __len__(self) -> int:
+        return self._store.num_clients
+
+    def __getitem__(self, ci):
+        if isinstance(ci, slice):
+            return [self._store.get(i) for i in range(*ci.indices(len(self)))]
+        return self._store.get(int(ci))
+
+    def __iter__(self):
+        for ci in range(len(self)):
+            yield self._store.get(ci)
+
+
+def _population_sample_counts(client_data: Sequence) -> np.ndarray:
+    """Per-client sample counts without holding shards: honor an optional
+    ``sample_counts`` attribute on lazy sequences (one materialization per
+    shard would defeat the point at 10^5 clients); otherwise measure each
+    shard once."""
+    counts = getattr(client_data, "sample_counts", None)
+    if counts is not None:
+        counts = np.asarray(counts, np.int64)
+        if counts.shape != (len(client_data),):
+            raise ValueError(
+                "client_data.sample_counts must have one entry per client"
+            )
+        return counts
+    return np.asarray(
+        [len(next(iter(cd.values()))) for cd in client_data], np.int64
+    )
+
+
+class InMemoryStore:
+    """Default store: the whole population resident, exactly as before.
+
+    ``bind`` builds every state eagerly in client order (same construction
+    order and RNG consumption as the pre-store engines — CI-enforced
+    bit-identical). Also owns the population-stacked device trees of the
+    vectorized/sharded engines (``stacked_lora`` & co.), which the runner
+    reaches through back-compat property shims.
+    """
+
+    out_of_core = False
+
+    def __init__(self):
+        self._states: List[Any] = []
+        self._client_data: Optional[Sequence] = None
+        self.num_clients = 0
+        # population-stacked client state (vectorized/sharded engines);
+        # ownership lives here so engines are storage-agnostic
+        self.stacked_lora: Any = None
+        self.stacked_opt: Any = None
+        self.stacked_mask: Any = None
+        self.stacked_residual: Any = None
+        self.stacked_comp_mask: Any = None
+
+    def bind(self, *, client_data, make_state, make_shell, telemetry=None):
+        del make_shell, telemetry  # nothing spills, nothing to trace
+        self._client_data = client_data
+        self.num_clients = len(client_data)
+        self._states = [make_state(ci) for ci in range(self.num_clients)]
+
+    def get(self, ci: int) -> Any:
+        return self._states[ci]
+
+    def put(self, ci: int, state: Any) -> None:
+        self._states[ci] = state
+
+    def client_data(self, ci: int) -> Dict[str, np.ndarray]:
+        return self._client_data[ci]
+
+    def sample_count(self, ci: int) -> int:
+        return self._states[ci].n
+
+    def pin(self, ci: int) -> None:
+        pass
+
+    def unpin(self, ci: int) -> None:
+        pass
+
+    def sync_pins(self, pinned: Set[int]) -> None:
+        pass
+
+    def flush(self) -> None:
+        pass
+
+
+class OutOfCoreStore:
+    """LRU hot set over flat-npz cold storage; peak memory ~ ``hot_slots``.
+
+    States are created lazily on first access and spilled (device trees ->
+    one npz per client, host metadata resident) when the hot set overflows.
+    Every resident state is treated as dirty at eviction — callers mutate
+    states in place, so the store conservatively re-spills rather than
+    tracking writes. Pinned clients (async in-flight/buffered) are skipped
+    by eviction; if every resident state is pinned the hot set temporarily
+    overflows rather than failing.
+
+    Args:
+      directory: cold-storage directory (created on bind; stale ``*.tmp``
+        from a crashed writer are swept on open).
+      hot_slots: resident-state capacity (>= 1). Size it to the round
+        cohort plus headroom — the population bench holds 10k+ clients with
+        a few dozen slots.
+    """
+
+    out_of_core = True
+
+    def __init__(self, directory: str, *, hot_slots: int = 64):
+        if hot_slots < 1:
+            raise ValueError("hot_slots must be >= 1")
+        self.directory = directory
+        self.hot_slots = hot_slots
+        self.num_clients = 0
+        self._client_data: Optional[Sequence] = None
+        self._make_state: Optional[Callable[[int], Any]] = None
+        self._make_shell: Optional[Callable[[int], Any]] = None
+        self._hot: "collections.OrderedDict[int, Any]" = collections.OrderedDict()
+        self._meta: Dict[int, Dict[str, Any]] = {}  # ci -> resident metadata
+        self._pinned: Set[int] = set()
+        self._counts: Optional[np.ndarray] = None
+        self.tel = ensure_telemetry(None)
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def bind(self, *, client_data, make_state, make_shell, telemetry=None):
+        self._client_data = client_data
+        self._make_state = make_state
+        self._make_shell = make_shell
+        self.num_clients = len(client_data)
+        self.tel = ensure_telemetry(telemetry)
+        os.makedirs(self.directory, exist_ok=True)
+        clean_stale_tmp(self.directory)
+
+    def _path(self, ci: int) -> str:
+        return os.path.join(self.directory, f"client_{ci}.npz")
+
+    # -- core protocol -----------------------------------------------------
+
+    def get(self, ci: int) -> Any:
+        state = self._hot.get(ci)
+        if state is not None:
+            self._hot.move_to_end(ci)
+            if self.tel.enabled:
+                self.tel.metrics.counter("store.hits").inc()
+            return state
+        state = self._fetch(ci)
+        self._hot[ci] = state
+        self._evict_overflow()
+        return state
+
+    def put(self, ci: int, state: Any) -> None:
+        self._hot[ci] = state
+        self._hot.move_to_end(ci)
+        self._evict_overflow()
+
+    def client_data(self, ci: int) -> Dict[str, np.ndarray]:
+        return self._client_data[ci]
+
+    def sample_count(self, ci: int) -> int:
+        meta = self._meta.get(ci)
+        if meta is not None:
+            return int(meta["n"])
+        state = self._hot.get(ci)
+        if state is not None:
+            return int(state.n)
+        return int(self.sample_counts()[ci])
+
+    def sample_counts(self) -> np.ndarray:
+        """(num_clients,) per-client sample counts, computed once."""
+        if self._counts is None:
+            self._counts = _population_sample_counts(self._client_data)
+        return self._counts
+
+    def pin(self, ci: int) -> None:
+        self._pinned.add(ci)
+
+    def unpin(self, ci: int) -> None:
+        self._pinned.discard(ci)
+        self._evict_overflow()
+
+    def sync_pins(self, pinned: Set[int]) -> None:
+        self._pinned = set(pinned)
+        self._evict_overflow()
+
+    def flush(self) -> None:
+        """Spill every resident state to cold storage (states stay hot)."""
+        with self.tel.span("store_flush", cat="store", track="server"):
+            for ci, state in self._hot.items():
+                self._spill(ci, state)
+
+    # -- hot/cold mechanics ------------------------------------------------
+
+    def _fetch(self, ci: int) -> Any:
+        with self.tel.span("store_fetch", cat="store", track="server",
+                           args={"client": ci}):
+            meta = self._meta.get(ci)
+            if meta is None:
+                # first touch: a fresh fully-initialized state
+                state = self._make_state(ci)
+                if self.tel.enabled:
+                    self.tel.metrics.counter("store.creates").inc()
+                return state
+            state = self._make_shell(ci)
+            trees = load_tree(self._path(ci)) if meta["spilled"] else {}
+            for field in SPILL_FIELDS:
+                status = meta["fields"][field]
+                if status == "none":
+                    value = None
+                elif status == "empty":
+                    value = {}
+                else:
+                    value = trees[field]
+                setattr(state, field, value)
+            state._lora_view = None
+            for field in META_FIELDS:
+                setattr(state, field, meta[field])
+            if self.tel.enabled:
+                self.tel.metrics.counter("store.misses").inc()
+            return state
+
+    def _spill(self, ci: int, state: Any) -> None:
+        fields: Dict[str, str] = {}
+        trees: Dict[str, Any] = {}
+        for field in SPILL_FIELDS:
+            value = getattr(state, field)
+            if value is None:
+                fields[field] = "none"
+            elif isinstance(value, dict) and not value:
+                # flatten_dict drops empty dicts (momentum-free SGD state);
+                # record presence out of band so the round trip is exact
+                fields[field] = "empty"
+            else:
+                fields[field] = "tree"
+                trees[field] = value
+        meta = {
+            "fields": fields,
+            "spilled": bool(trees),
+        }
+        for field in META_FIELDS:
+            meta[field] = getattr(state, field)
+        if trees:
+            save_tree(self._path(ci), trees)
+        self._meta[ci] = meta
+
+    def _evict_overflow(self) -> None:
+        while len(self._hot) > self.hot_slots:
+            victim = None
+            for ci in self._hot:  # oldest-first (LRU order)
+                if ci not in self._pinned:
+                    victim = ci
+                    break
+            if victim is None:
+                return  # everything pinned: overflow rather than fail
+            state = self._hot.pop(victim)
+            with self.tel.span("store_evict", cat="store", track="server",
+                               args={"client": victim}):
+                self._spill(victim, state)
+            if self.tel.enabled:
+                self.tel.metrics.counter("store.evictions").inc()
+                self.tel.metrics.gauge("store.hot").set(len(self._hot))

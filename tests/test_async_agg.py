@@ -668,3 +668,131 @@ def test_observed_pacing_noop_when_homogeneous():
     assert sched._obs_step_time  # evidence exists...
     for ci in range(8):
         assert sched.observed_rel_speed(ci) == 1.0  # ...and shows no skew
+
+
+# ---------------------------------------------------------------------------
+# server-lr schedules (delta merge) and dispatch-time staleness prediction
+# ---------------------------------------------------------------------------
+
+
+def test_resolve_server_lr_schedules():
+    from repro.federated.async_agg import resolve_server_lr
+
+    assert resolve_server_lr(0.7, 9) == 0.7  # float spec is the identity
+    assert resolve_server_lr(lambda t: 1.0 / (1 + t), 3) == pytest.approx(0.25)
+    assert resolve_server_lr(("constant", 0.5, 123.0), 7) == 0.5
+    assert resolve_server_lr(("inv_sqrt", 1.0, 0.25), 12) == pytest.approx(0.5)
+    assert resolve_server_lr(("exp", 2.0, 0.1), 5) == pytest.approx(
+        2.0 * math.exp(-0.5)
+    )
+    with pytest.raises(ValueError):
+        resolve_server_lr(("nope", 1.0, 0.0), 0)
+
+
+def test_server_lr_schedule_spec_validation():
+    AsyncAggConfig(merge_mode="delta", server_lr=("inv_sqrt", 1.0, 0.1))
+    AsyncAggConfig(merge_mode="delta", server_lr=lambda t: 0.5)
+    for bad in (
+        ("inv_sqrt", 1.0),  # wrong arity
+        ("nope", 1.0, 0.1),  # unknown kind
+        ("exp", 0.0, 0.1),  # base must be > 0
+        ("exp", 1.0, -0.1),  # decay must be >= 0
+    ):
+        with pytest.raises(ValueError):
+            AsyncAggConfig(server_lr=bad)
+
+
+def test_delta_merge_applies_server_lr_schedule():
+    """The k-th published merge uses eta(k): with zero staleness the delta
+    weights sum exactly to the scheduled rate."""
+    from repro.federated.async_agg import resolve_server_lr
+
+    spec = ("inv_sqrt", 0.8, 0.5)
+    sched = make_scheduler("uniform", seed=3, merge_mode="delta", server_lr=spec)
+    trained = []
+    plan, train = make_stub_callbacks(trained)
+    for t in range(3):
+        result = sched.run_until_merge(t, plan, train)
+        np.testing.assert_array_equal(result.staleness, 0)
+        assert result.weights.sum() == pytest.approx(resolve_server_lr(spec, t))
+
+
+def test_constant_schedule_bit_identical_to_float():
+    runs = []
+    for spec in (0.6, ("constant", 0.6, 7.0)):
+        sched = make_scheduler("uniform", seed=11, merge_mode="delta", server_lr=spec)
+        trained = []
+        plan, train = make_stub_callbacks(trained)
+        runs.append(
+            [sched.run_until_merge(t, plan, train).weights for t in range(3)]
+        )
+    for wa, wb in zip(*runs):
+        np.testing.assert_array_equal(wa, wb)
+
+
+def test_predict_staleness_requires_cutoff():
+    with pytest.raises(ValueError):
+        AsyncAggConfig(predict_staleness=True)
+    AsyncAggConfig(predict_staleness=True, staleness_cutoff=2)
+
+
+def test_predicted_staleness_needs_evidence():
+    sched = make_scheduler(
+        "uniform", seed=0, predict_staleness=True, staleness_cutoff=4
+    )
+    # no completions, no merge cadence => no prediction (dispatch unfiltered)
+    assert sched.predicted_staleness(0, 3) is None
+    trained = []
+    plan, train = make_stub_callbacks(trained)
+    sched.run_until_merge(0, plan, train)
+    ci = trained[0].client
+    tau = sched.predicted_staleness(ci, 3)
+    assert tau is not None and tau >= 0.0
+
+
+def test_predict_staleness_inert_with_loose_cutoff():
+    """Prediction with a cutoff nothing can exceed must replay the unfiltered
+    scheduler event-for-event (same dispatch RNG stream, same merges)."""
+
+    def run(**kw):
+        sched = make_scheduler("straggler", seed=9, **kw)
+        trained = []
+        plan, train = make_stub_callbacks(trained)
+        out = []
+        for t in range(5):
+            r = sched.run_until_merge(t, plan, train)
+            out.append(
+                (sorted(int(u.client) for u in r.updates), [int(s) for s in r.staleness])
+            )
+        return out
+
+    base = run()
+    loose = run(staleness_cutoff=10**6)
+    pred = run(staleness_cutoff=10**6, predict_staleness=True)
+    assert base == loose == pred
+
+
+def test_predict_filter_skips_slow_clients_and_backs_off():
+    sched = make_scheduler(
+        "straggler", seed=0, buffer_size=2,
+        predict_staleness=True, staleness_cutoff=10**6,
+    )
+    trained = []
+    plan, train = make_stub_callbacks(trained)
+    for t in range(10):
+        sched.run_until_merge(t, plan, train)
+    slow = [int(c) for c in np.flatnonzero(sched.scenario.speed > 1.0)]
+    fast = [int(c) for c in np.flatnonzero(sched.scenario.speed == 1.0)]
+    slow_e = [c for c in slow if sched.predicted_staleness(c, 3) is not None]
+    fast_e = [c for c in fast if sched.predicted_staleness(c, 3) is not None]
+    assert slow_e and fast_e, "need completion evidence on both speed tiers"
+    sc, fc = slow_e[0], fast_e[0]
+    ts, tf = sched.predicted_staleness(sc, 3), sched.predicted_staleness(fc, 3)
+    # a straggler is predicted to land more merges late than a fast client
+    assert ts > tf
+    # cutoff between the two predictions: only the straggler is skipped
+    sched.staleness_cutoff = (ts + tf) / 2.0
+    assert sched._predict_filter([sc, fc], 0, plan) == [fc]
+    # everyone predicted past the cutoff: back off to the unfiltered pool
+    sched.staleness_cutoff = min(ts, tf) / 2.0
+    assert sched._predict_filter([sc, fc], 0, plan) == [sc, fc]

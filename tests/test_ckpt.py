@@ -1,0 +1,170 @@
+"""Safety net for the flat-npz checkpoint layer (repro.checkpoint.ckpt).
+
+This layer doubles as the out-of-core client store's backing format, so the
+round-trip / atomicity contracts here are load-bearing for population-scale
+runs, not just for resumable training.
+"""
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (
+    clean_stale_tmp,
+    latest_checkpoint,
+    load_checkpoint,
+    load_tree,
+    save_checkpoint,
+    save_tree,
+)
+
+
+def _nested_tree():
+    return {
+        "lora": {
+            "layer_0": {
+                "A": np.arange(12, dtype=np.float32).reshape(3, 4),
+                "B": np.ones((4, 2), dtype=np.bfloat16)
+                if hasattr(np, "bfloat16")
+                else jnp.ones((4, 2), jnp.bfloat16),
+            },
+        },
+        "opt": {
+            "m": {"w": np.zeros((2, 2), dtype=np.float16)},
+            "t": np.int32(7),
+        },
+        "mask": np.array([True, False, True]),
+        "count": np.int64(123),
+    }
+
+
+def _assert_trees_equal(a, b):
+    if isinstance(a, dict):
+        assert set(a) == set(b)
+        for k in a:
+            _assert_trees_equal(a[k], b[k])
+    else:
+        a, b = np.asarray(a), np.asarray(b)
+        assert a.dtype == b.dtype
+        assert a.shape == b.shape
+        np.testing.assert_array_equal(a, b)
+
+
+class TestTreeRoundTrip:
+    def test_nested_dtypes_and_shapes(self, tmp_path):
+        tree = _nested_tree()
+        path = save_tree(str(tmp_path / "state.npz"), tree)
+        _assert_trees_equal(load_tree(path), tree)
+
+    def test_jax_arrays_round_trip_as_numpy(self, tmp_path):
+        tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3)}
+        out = load_tree(save_tree(str(tmp_path / "j.npz"), tree))
+        np.testing.assert_array_equal(
+            out["a"], np.arange(6, dtype=np.float32).reshape(2, 3)
+        )
+        assert out["a"].dtype == np.float32
+
+    def test_empty_tree(self, tmp_path):
+        path = save_tree(str(tmp_path / "empty.npz"), {})
+        assert load_tree(path) == {}
+
+    def test_scalar_zero_dim(self, tmp_path):
+        tree = {"t": np.int32(5), "x": np.float32(1.5)}
+        out = load_tree(save_tree(str(tmp_path / "s.npz"), tree))
+        assert out["t"].shape == ()
+        assert out["t"].dtype == np.int32
+        assert int(out["t"]) == 5
+        assert float(out["x"]) == 1.5
+
+    def test_creates_missing_directory(self, tmp_path):
+        path = save_tree(str(tmp_path / "deep" / "er" / "x.npz"), {"a": np.ones(2)})
+        assert os.path.exists(path)
+
+    def test_overwrite_is_atomic_replace(self, tmp_path):
+        path = str(tmp_path / "x.npz")
+        save_tree(path, {"a": np.zeros(3, np.float32)})
+        save_tree(path, {"a": np.ones(5, np.float64)})
+        out = load_tree(path)
+        assert out["a"].shape == (5,)
+        assert out["a"].dtype == np.float64
+
+
+class TestCheckpointConvention:
+    def test_save_load_round_trip(self, tmp_path):
+        tree = _nested_tree()
+        path = save_checkpoint(str(tmp_path), 3, tree)
+        assert path.endswith("ckpt_3.npz")
+        _assert_trees_equal(load_checkpoint(path), tree)
+
+    def test_latest_checkpoint_numeric_ordering(self, tmp_path):
+        # step 10 > step 9 numerically even though "ckpt_10" < "ckpt_9" as strings
+        for step in (9, 10, 2):
+            save_checkpoint(str(tmp_path), step, {"s": np.int32(step)}, keep=10)
+        latest = latest_checkpoint(str(tmp_path))
+        assert latest.endswith("ckpt_10.npz")
+        assert int(load_checkpoint(latest)["s"]) == 10
+
+    def test_latest_checkpoint_missing_dir(self, tmp_path):
+        assert latest_checkpoint(str(tmp_path / "nope")) is None
+
+    def test_latest_checkpoint_ignores_foreign_files(self, tmp_path):
+        (tmp_path / "notes.txt").write_text("hi")
+        (tmp_path / "ckpt_bad.npz").write_bytes(b"")
+        assert latest_checkpoint(str(tmp_path)) is None
+        save_checkpoint(str(tmp_path), 1, {"a": np.ones(1)})
+        assert latest_checkpoint(str(tmp_path)).endswith("ckpt_1.npz")
+
+    def test_keep_gc_prunes_oldest(self, tmp_path):
+        for step in range(6):
+            save_checkpoint(str(tmp_path), step, {"s": np.int32(step)}, keep=2)
+        names = sorted(n for n in os.listdir(tmp_path) if n.endswith(".npz"))
+        assert names == ["ckpt_4.npz", "ckpt_5.npz"]
+
+    def test_keep_gc_does_not_touch_foreign_npz(self, tmp_path):
+        save_tree(str(tmp_path / "client_0.npz"), {"a": np.ones(1)})
+        for step in range(4):
+            save_checkpoint(str(tmp_path), step, {"s": np.int32(step)}, keep=1)
+        assert (tmp_path / "client_0.npz").exists()
+
+
+class TestAtomicity:
+    def test_no_tmp_leak_on_success(self, tmp_path):
+        save_tree(str(tmp_path / "x.npz"), _nested_tree())
+        save_checkpoint(str(tmp_path), 1, _nested_tree())
+        assert not [n for n in os.listdir(tmp_path) if n.endswith(".tmp")]
+
+    def test_no_tmp_leak_on_write_failure(self, tmp_path, monkeypatch):
+        def boom(f, **arrays):
+            raise OSError("disk full")
+
+        monkeypatch.setattr(np, "savez", boom)
+        with pytest.raises(OSError):
+            save_tree(str(tmp_path / "x.npz"), {"a": np.ones(2)})
+        assert os.listdir(tmp_path) == []
+
+    def test_failed_overwrite_preserves_previous_file(self, tmp_path, monkeypatch):
+        path = str(tmp_path / "x.npz")
+        save_tree(path, {"a": np.full(3, 7.0, np.float32)})
+
+        def boom(f, **arrays):
+            raise OSError("disk full")
+
+        monkeypatch.setattr(np, "savez", boom)
+        with pytest.raises(OSError):
+            save_tree(path, {"a": np.zeros(3, np.float32)})
+        monkeypatch.undo()
+        np.testing.assert_array_equal(load_tree(path)["a"], np.full(3, 7.0))
+
+    def test_clean_stale_tmp(self, tmp_path):
+        # simulate a SIGKILLed writer: stranded tmp files next to a good ckpt
+        save_checkpoint(str(tmp_path), 1, {"a": np.ones(2)})
+        (tmp_path / "abc123.tmp").write_bytes(b"partial")
+        (tmp_path / "def456.tmp").write_bytes(b"partial")
+        assert clean_stale_tmp(str(tmp_path)) == 2
+        assert not [n for n in os.listdir(tmp_path) if n.endswith(".tmp")]
+        # the real checkpoint survives the sweep
+        assert latest_checkpoint(str(tmp_path)).endswith("ckpt_1.npz")
+
+    def test_clean_stale_tmp_missing_dir(self, tmp_path):
+        assert clean_stale_tmp(str(tmp_path / "nope")) == 0

@@ -635,3 +635,166 @@ def test_stack_clients_pads_inert_rows():
     ref = stack_clients(data, 2)
     np.testing.assert_array_equal(stack.data["tokens"][:2], ref.data["tokens"])
     np.testing.assert_array_equal(stack.sample_valid[:2], ref.sample_valid)
+
+
+# ---------------------------------------------------------------------------
+# Client-state ownership: ClientStore refactor (in-memory default must be a
+# pure refactor; out-of-core must be allclose with identical comm accounting;
+# two-tier hierarchy must be exact at one edge).
+# ---------------------------------------------------------------------------
+
+
+def test_inmemory_store_default_bit_identical(world):
+    """Passing an explicit InMemoryStore must be byte-for-byte the default:
+    the store refactor is ownership-only, not a numerical change."""
+    from repro.federated import InMemoryStore
+
+    model, loss_fn, client_data = world
+    runs = {}
+    for store in (None, InMemoryStore()):
+        r = make_runner(
+            "fibecfed", model, loss_fn, FL, client_data,
+            optimizer="adamw", engine="vectorized", seed=7, store=store,
+        )
+        r.init_phase()
+        h = [r.run_round(t) for t in range(ROUNDS)]
+        runs[store is None] = (r, h)
+    (r_def, h_def), (r_exp, h_exp) = runs[True], runs[False]
+    for hd, he in zip(h_def, h_exp):
+        assert hd["loss"] == he["loss"]
+    assert _leaves_equal(r_def.global_lora, r_exp.global_lora)
+    assert r_def.comm_bytes_per_round == r_exp.comm_bytes_per_round
+
+
+@pytest.mark.parametrize("engine", ["loop", "vectorized", "async"])
+def test_out_of_core_store_matches_in_memory(world, engine, tmp_path):
+    """OutOfCoreStore with hot_slots < num_clients forces spill/reload every
+    round; the run must stay allclose to the in-memory store with identical
+    comm accounting, and cold files must actually land on disk."""
+    import os
+
+    from repro.federated import OutOfCoreStore
+
+    model, loss_fn, client_data = world
+    r_mem, h_mem = _run(world, "fibecfed", "adamw", engine)
+    store = OutOfCoreStore(str(tmp_path), hot_slots=2)
+    r_ooc = make_runner(
+        "fibecfed", model, loss_fn, FL, client_data,
+        optimizer="adamw", engine=engine, seed=7, store=store,
+    )
+    r_ooc.init_phase()
+    h_ooc = [r_ooc.run_round(t) for t in range(ROUNDS)]
+
+    for hm, ho in zip(h_mem, h_ooc):
+        assert hm["loss"] == pytest.approx(ho["loss"], rel=1e-4, abs=1e-5)
+        assert hm["selected_batches"] == ho["selected_batches"]
+    _assert_close_trees(r_mem.global_lora, r_ooc.global_lora)
+    assert r_mem.comm_bytes_per_round == r_ooc.comm_bytes_per_round
+
+    # eviction really happened: cold state was spilled to flat-npz files
+    spilled = [f for f in os.listdir(tmp_path) if f.endswith(".npz")]
+    assert len(spilled) >= FL.num_devices - 2
+
+    # resident set stays bounded by the hot-set size
+    store.flush()
+    assert len(spilled) >= 2
+    for ci in range(FL.num_devices):
+        st = store.get(ci)
+        for a, b in zip(jax.tree.leaves(st.lora), jax.tree.leaves(r_ooc.clients[ci].lora)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_out_of_core_rejected_for_sharded(world, tmp_path):
+    from repro.federated import OutOfCoreStore
+
+    model, loss_fn, client_data = world
+    with pytest.raises(ValueError, match="sharded"):
+        make_runner(
+            "fibecfed", model, loss_fn, FL, client_data,
+            optimizer="adamw", engine="sharded", seed=7,
+            store=OutOfCoreStore(str(tmp_path), hot_slots=2),
+        )
+
+
+def test_hierarchy_rejected_for_sync_engines(world):
+    model, loss_fn, client_data = world
+    with pytest.raises(ValueError, match="async"):
+        make_runner(
+            "fibecfed", model, loss_fn, FL, client_data,
+            optimizer="adamw", engine="vectorized", seed=7, hierarchy=2,
+        )
+
+
+def test_hierarchy_single_edge_bit_exact(world):
+    """One edge is the flat merge routed through an edge summary: contracting
+    a single partial sum with weight 1.0 is the identity, so the two-tier run
+    must be bit-identical to the flat async engine."""
+    model, loss_fn, client_data = world
+    r_flat, h_flat = _run(world, "fibecfed", "adamw", "async")
+    r_edge = make_runner(
+        "fibecfed", model, loss_fn, FL, client_data,
+        optimizer="adamw", engine="async", seed=7, hierarchy=1,
+    )
+    r_edge.init_phase()
+    h_edge = [r_edge.run_round(t) for t in range(ROUNDS)]
+    for hf, he in zip(h_flat, h_edge):
+        assert hf["loss"] == he["loss"]
+    assert _leaves_equal(r_flat.global_lora, r_edge.global_lora)
+    assert r_flat.comm_bytes_per_round == r_edge.comm_bytes_per_round
+
+
+@pytest.mark.parametrize("num_edges", [2, 3])
+def test_hierarchy_multi_edge_allclose(world, num_edges):
+    """Multiple edges reassociate the weighted sum (client partials are
+    reduced per edge before the server contraction): allclose to flat, with
+    the wire bill unchanged (edge aggregation is lossless)."""
+    model, loss_fn, client_data = world
+    r_flat, h_flat = _run(world, "fibecfed", "adamw", "async")
+    r_edge = make_runner(
+        "fibecfed", model, loss_fn, FL, client_data,
+        optimizer="adamw", engine="async", seed=7, hierarchy=num_edges,
+    )
+    r_edge.init_phase()
+    h_edge = [r_edge.run_round(t) for t in range(ROUNDS)]
+    for hf, he in zip(h_flat, h_edge):
+        assert hf["loss"] == pytest.approx(he["loss"], rel=1e-4, abs=1e-5)
+    _assert_close_trees(r_flat.global_lora, r_edge.global_lora)
+    assert r_flat.comm_bytes_per_round == r_edge.comm_bytes_per_round
+
+
+def test_ef_residual_survives_eviction(world, tmp_path):
+    """Error-feedback residuals are client state: evicting a client to disk
+    mid-run and reloading it must leave the EF telescoping unchanged vs the
+    in-memory run (same residual trees, same global model)."""
+    from repro.federated import CompressionConfig, OutOfCoreStore
+
+    model, loss_fn, client_data = world
+    comp = CompressionConfig(
+        mode="topk", topk_ratio=0.25, topk_values="int8", error_feedback=True
+    )
+    runs = {}
+    for key, store in (
+        ("mem", None),
+        ("ooc", OutOfCoreStore(str(tmp_path), hot_slots=1)),
+    ):
+        r = make_runner(
+            "fibecfed", model, loss_fn, FL, client_data,
+            optimizer="adamw", engine="loop", seed=7,
+            compression=comp, store=store,
+        )
+        r.init_phase()
+        for t in range(ROUNDS):
+            r.run_round(t)
+        runs[key] = r
+    r_mem, r_ooc = runs["mem"], runs["ooc"]
+    _assert_close_trees(r_mem.global_lora, r_ooc.global_lora)
+    assert r_mem.comm_bytes_per_round == r_ooc.comm_bytes_per_round
+    assert r_mem.comm_upload_bytes_per_round == r_ooc.comm_upload_bytes_per_round
+    seen = 0
+    for cm, co in zip(r_mem.clients, r_ooc.clients):
+        if cm.ef_residual is None:
+            assert co.ef_residual is None
+            continue
+        seen += 1
+        _assert_close_trees(cm.ef_residual, co.ef_residual)
+    assert seen > 0
