@@ -1,8 +1,15 @@
 from repro.checkpoint.ckpt import (
+    CorruptCheckpointError,
     clean_stale_tmp,
     latest_checkpoint,
     load_checkpoint,
     load_tree,
     save_checkpoint,
     save_tree,
+)
+from repro.checkpoint.federation import (
+    latest_run_checkpoint,
+    load_run_checkpoint,
+    restore_runner,
+    save_run_checkpoint,
 )

@@ -17,11 +17,19 @@ import json
 import os
 import re
 import tempfile
+import zipfile
 from typing import Any, Dict, Optional
 
 import numpy as np
 
 from repro.utils import flatten_dict, unflatten_dict
+
+
+class CorruptCheckpointError(RuntimeError):
+    """A checkpoint file exists but cannot be decoded (truncated/partial
+    write, e.g. a crash that outran the tmp+rename protocol on a non-atomic
+    filesystem). Raised instead of the underlying zip/npz error so callers
+    fail loudly with the offending path — never a silently wrong tree."""
 
 _STEP_RE = re.compile(r"ckpt_(\d+)\.npz$")
 
@@ -67,20 +75,34 @@ def save_tree(path: str, tree: Any) -> str:
 
 
 def load_tree(path: str) -> Dict[str, Any]:
-    """Load a flat-npz pytree written by :func:`save_tree` (nested dict out)."""
-    with np.load(path) as data:
-        manifest = {}
-        if _DTYPE_MANIFEST in data.files:
-            manifest = json.loads(bytes(data[_DTYPE_MANIFEST]).decode("utf-8"))
-        flat = {}
-        for k in data.files:
-            if k == _DTYPE_MANIFEST:
-                continue
-            arr = data[k]
-            want = manifest.get(k)
-            if want is not None and arr.dtype.name != want:
-                arr = arr.view(_resolve_dtype(want))
-            flat[k] = arr
+    """Load a flat-npz pytree written by :func:`save_tree` (nested dict out).
+
+    Raises :class:`CorruptCheckpointError` when the file exists but is not a
+    readable npz (truncated zip directory, clipped entry, bad CRC) — a
+    partial write must never decode to a zero-filled or shortened tree.
+    A missing file still raises the plain ``FileNotFoundError``.
+    """
+    try:
+        with np.load(path) as data:
+            manifest = {}
+            if _DTYPE_MANIFEST in data.files:
+                manifest = json.loads(bytes(data[_DTYPE_MANIFEST]).decode("utf-8"))
+            flat = {}
+            for k in data.files:
+                if k == _DTYPE_MANIFEST:
+                    continue
+                arr = data[k]
+                want = manifest.get(k)
+                if want is not None and arr.dtype.name != want:
+                    arr = arr.view(_resolve_dtype(want))
+                flat[k] = arr
+    except FileNotFoundError:
+        raise
+    except (zipfile.BadZipFile, EOFError, OSError, ValueError, KeyError) as e:
+        raise CorruptCheckpointError(
+            f"checkpoint file {path!r} is unreadable ({type(e).__name__}: {e});"
+            " likely a partial write — restore from an older checkpoint"
+        ) from e
     return unflatten_dict(flat)
 
 
@@ -105,7 +127,13 @@ def clean_stale_tmp(directory: str) -> int:
 
 
 def save_checkpoint(directory: str, step: int, tree: Any, *, keep: int = 3) -> str:
-    """Save `tree` (nested dict of arrays) as ckpt_<step>.npz. Returns path."""
+    """Save `tree` (nested dict of arrays) as ckpt_<step>.npz. Returns path.
+
+    Also sweeps ``*.tmp`` strays from a previously crashed writer — the
+    checkpoint convention is single-writer, so the next save is the natural
+    point to reclaim the space.
+    """
+    clean_stale_tmp(directory)
     path = save_tree(os.path.join(directory, f"ckpt_{step}.npz"), tree)
     _gc(directory, keep)
     return path

@@ -1691,6 +1691,7 @@ class FibecFed:
                 [u.client for u in result.updates],
                 len(self.clients),
                 self._hierarchy.num_edges,
+                assignments=self._hierarchy.assignments,
             )
         else:
             stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *payloads)
@@ -1743,6 +1744,274 @@ class FibecFed:
                 max(len(np.asarray(u.step_valid)) for u in result.updates)
             ),
         }
+
+    # ------------------------------------------------------------------
+    # run checkpointing (repro.checkpoint.federation)
+    # ------------------------------------------------------------------
+
+    def checkpoint_state(self):
+        """``(host, arrays, files)`` — everything a fresh runner needs to
+        continue this run exactly where it stands.
+
+        ``host`` is JSON-able (config fingerprint for validation, the cohort
+        RNG state, comm accounting, the async scheduler's bookkeeping);
+        ``arrays`` is one nested dict of numpy/JAX arrays (global LoRA, GAL
+        selection, client state — stacked trees, per-client trees, or the
+        out-of-core store's resident metadata, depending on engine/store);
+        ``files`` maps cold-file names to paths for the checkpoint writer to
+        hardlink (out-of-core store only). Deliberately NOT captured:
+        anything derivable from the constructor args (params, data stacks,
+        batches, schedules, compiled programs) and per-client momentum FIMs
+        on the in-memory stacked engines (write-only diagnostics after
+        ``init_phase``; the store engines spill them anyway).
+        """
+        from repro.federated.store import OutOfCoreStore
+
+        host: Dict[str, Any] = {
+            "engine": self.engine,
+            "num_clients": len(self.clients),
+            "seed": int(self._seed),
+            "optimizer": self.optimizer_name,
+            "initialized": self.gal_layers is not None,
+            "rng_state": self.rng.bit_generator.state,
+            "comm_bytes_per_round": [int(x) for x in self.comm_bytes_per_round],
+            "comm_upload_bytes_per_round": [
+                int(x) for x in self.comm_upload_bytes_per_round
+            ],
+        }
+        arrays: Dict[str, Any] = {"global_lora": self.global_lora}
+        files: Dict[str, str] = {}
+        if self.gal_layers is not None:
+            arrays["gal_layers"] = np.asarray(self.gal_layers, bool)
+
+        if self._oocore:
+            s_host, s_arrays, files = self.store.checkpoint_state()
+            host["store"] = s_host
+            if s_arrays:
+                arrays["store"] = s_arrays
+        elif self._stacked_engine:
+            stacked: Dict[str, Any] = {"lora": self._stacked_lora}
+            opt_empty = (
+                isinstance(self._stacked_opt, dict) and not self._stacked_opt
+            )
+            if not opt_empty:
+                stacked["opt"] = self._stacked_opt
+            for name, tree in (
+                ("mask", self._stacked_mask),
+                ("residual", self._stacked_residual),
+                ("comp_mask", self._stacked_comp_mask),
+            ):
+                if tree is not None:
+                    stacked[name] = tree
+            arrays["stacked"] = stacked
+            host["stacked"] = {
+                "opt_empty": opt_empty,
+                "has_mask": self._stacked_mask is not None,
+                "has_residual": self._stacked_residual is not None,
+                "has_comp_mask": self._stacked_comp_mask is not None,
+            }
+            host["clients"], carrs = self._checkpoint_client_meta()
+            if carrs:
+                arrays["clients"] = carrs
+        else:  # loop / async on the in-memory store: concrete per-client trees
+            clients_host, carrs = self._checkpoint_client_meta()
+            for ci, client in enumerate(self.clients):
+                fields, trees = OutOfCoreStore._split_state(client)
+                clients_host[str(ci)]["fields"] = fields
+                if trees:
+                    carrs.setdefault(str(ci), {})["trees"] = trees
+            host["clients"] = clients_host
+            if carrs:
+                arrays["clients"] = carrs
+
+        if self._async:
+            a_host: Dict[str, Any] = {
+                "global_version": int(self._global.version),
+                "has_back": self._global.back is not None,
+                "scheduler": None,
+            }
+            a_arrays: Dict[str, Any] = {}
+            if self._global.back is not None:
+                a_arrays["back"] = self._global.back
+            if self._scheduler is not None:
+                s_host, s_arrays = self._scheduler.checkpoint_state()
+                a_host["scheduler"] = s_host
+                if s_arrays:
+                    a_arrays["scheduler"] = s_arrays
+            host["async"] = a_host
+            if a_arrays:
+                arrays["async"] = a_arrays
+        return host, arrays, files
+
+    def _checkpoint_client_meta(self):
+        """Host-side curriculum metadata of every client (in-memory stores).
+
+        ``order``/``difficulty``/``layer_scores`` go to arrays;
+        ``lossless_fraction`` rides in host. ``n``/``batches`` are derived
+        from the data shards at construction, so they are not captured.
+        """
+        clients_host: Dict[str, Any] = {}
+        carrs: Dict[str, Any] = {}
+        for ci, client in enumerate(self.clients):
+            key = str(ci)
+            clients_host[key] = {
+                "lossless_fraction": float(client.lossless_fraction),
+                "has_difficulty": client.difficulty is not None,
+                "has_layer_scores": client.layer_scores is not None,
+            }
+            meta = {"order": np.asarray(client.order)}
+            if client.difficulty is not None:
+                meta["difficulty"] = np.asarray(client.difficulty)
+            if client.layer_scores is not None:
+                meta["layer_scores"] = np.asarray(client.layer_scores)
+            carrs[key] = {"meta": meta}
+        return clients_host, carrs
+
+    def restore_state(self, host, arrays, *, store_files_dir: str = "") -> None:
+        """Install a :meth:`checkpoint_state` snapshot on this runner.
+
+        The runner must be freshly constructed with the same configuration
+        the snapshot was taken under (engine, population, optimizer — the
+        basics are validated; the rest is the caller's contract) and must
+        NOT have run ``init_phase`` or any round: restore *replaces* state,
+        it does not merge. ``store_files_dir`` points at the checkpoint's
+        cold-file directory (out-of-core store only).
+        """
+        from repro.federated.store import SPILL_FIELDS
+
+        for field, mine in (
+            ("engine", self.engine),
+            ("num_clients", len(self.clients)),
+            ("optimizer", self.optimizer_name),
+        ):
+            if host[field] != mine:
+                raise ValueError(
+                    f"checkpoint was taken with {field}={host[field]!r}; "
+                    f"this runner has {mine!r}"
+                )
+        self.rng.bit_generator.state = host["rng_state"]
+        self.comm_bytes_per_round = [int(x) for x in host["comm_bytes_per_round"]]
+        self.comm_upload_bytes_per_round = [
+            int(x) for x in host["comm_upload_bytes_per_round"]
+        ]
+        repl_shd = (
+            eng.replicated_sharding(self.mesh) if self.mesh is not None else None
+        )
+        client_shd = (
+            eng.client_sharding(self.mesh) if self.mesh is not None else None
+        )
+
+        def _dev(tree, shd=None):
+            # jnp.array, not asarray: restored leaves must own their buffers.
+            # On CPU asarray can alias the numpy arrays backing the loaded
+            # npz, and the vectorized round *donates* the stacked trees —
+            # donating an aliased buffer lets XLA write through freed host
+            # memory (segfault).
+            tree = jax.tree.map(jnp.array, tree)
+            return tree if shd is None else jax.device_put(tree, shd)
+
+        self.global_lora = _dev(arrays["global_lora"], repl_shd)
+        if host["initialized"]:
+            self.gal_layers = np.asarray(arrays["gal_layers"], bool)
+            self._gal_mask_tree = gal_mask_tree(
+                self.cfg, self.global_lora, self.gal_layers
+            )
+            if repl_shd is not None:
+                self._gal_mask_tree = jax.device_put(self._gal_mask_tree, repl_shd)
+        else:
+            self.gal_layers = None
+            self._gal_mask_tree = None
+        # derived caches keyed on the GAL selection: rebuild lazily
+        self._gal_leaf_cache = None
+        self._comm_bytes_cache = {}
+        self._comp_mask_cache = {}
+
+        if self._oocore:
+            self.store.restore_checkpoint_state(
+                host["store"], arrays.get("store", {}), store_files_dir
+            )
+        elif self._stacked_engine:
+            st_host, st = host["stacked"], arrays["stacked"]
+            self._stacked_lora = _dev(st["lora"], client_shd)
+            self._stacked_opt = {} if st_host["opt_empty"] else _dev(
+                st["opt"], client_shd
+            )
+            self._stacked_mask = (
+                _dev(st["mask"], client_shd) if st_host["has_mask"] else None
+            )
+            self._stacked_residual = (
+                _dev(st["residual"], client_shd)
+                if st_host["has_residual"]
+                else None
+            )
+            self._stacked_comp_mask = (
+                _dev(st["comp_mask"], client_shd)
+                if st_host["has_comp_mask"]
+                else None
+            )
+            self._restore_client_meta(host["clients"], arrays.get("clients", {}))
+            for ci, client in enumerate(self.clients):
+                # lora stays a lazy view into the restored stack (the view
+                # closure reads the live property); masks re-slice it
+                client.neuron_mask = (
+                    None
+                    if self._stacked_mask is None
+                    else jax.tree.map(
+                        lambda x, ci=ci: x[ci], self._stacked_mask
+                    )
+                )
+        else:
+            self._restore_client_meta(host["clients"], arrays.get("clients", {}))
+            carrs = arrays.get("clients", {})
+            for ci, client in enumerate(self.clients):
+                key = str(ci)
+                fields = host["clients"][key]["fields"]
+                trees = carrs.get(key, {}).get("trees", {})
+                for field in SPILL_FIELDS:
+                    status = fields[field]
+                    if status == "none":
+                        value = None
+                    elif status == "empty":
+                        value = {}
+                    else:
+                        value = _dev(trees[field])
+                    if field == "_lora":
+                        client.lora = value  # setter also clears any view
+                    else:
+                        setattr(client, field, value)
+                self.store.put(ci, client)
+
+        if self._async:
+            from repro.federated.async_agg import DoubleBufferedGlobal
+
+            a_host = host["async"]
+            a_arrays = arrays.get("async", {})
+            self._global = DoubleBufferedGlobal(self.global_lora)
+            self._global.version = int(a_host["global_version"])
+            if a_host["has_back"]:
+                self._global.back = _dev(a_arrays["back"])
+            if a_host["scheduler"] is not None:
+                sched = self._ensure_scheduler()
+                sched.restore_checkpoint_state(
+                    a_host["scheduler"], a_arrays.get("scheduler", {})
+                )
+                self.store.sync_pins(
+                    set(sched.in_flight) | {u.client for u in sched.buffer}
+                )
+
+    def _restore_client_meta(self, clients_host, carrs) -> None:
+        for ci, client in enumerate(self.clients):
+            key = str(ci)
+            m = clients_host[key]
+            meta = carrs.get(key, {}).get("meta", {})
+            client.order = np.asarray(meta["order"])
+            client.lossless_fraction = float(m["lossless_fraction"])
+            client.difficulty = (
+                np.asarray(meta["difficulty"]) if m["has_difficulty"] else None
+            )
+            client.layer_scores = (
+                np.asarray(meta["layer_scores"]) if m["has_layer_scores"] else None
+            )
 
     # ------------------------------------------------------------------
     # evaluation

@@ -31,4 +31,5 @@ from repro.federated.hierarchy import (
     edge_reduce,
     get_hierarchy,
 )
+from repro.federated.service import Federation, FederationService
 from repro.federated.store import ClientStore, InMemoryStore, OutOfCoreStore

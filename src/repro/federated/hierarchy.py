@@ -45,13 +45,35 @@ class HierarchyConfig:
     ``num_edges=1`` is the degenerate single-aggregator topology — the
     edge tier reduces the whole buffer and the server applies it with
     weight 1.0, bit-exact to the flat merge.
+
+    ``assignments`` optionally pins an explicit client→edge map (one edge
+    id per client, each in ``[0, num_edges)``) instead of the default
+    balanced contiguous blocks of :func:`edge_assignments` — real regions
+    are rarely equal-sized id ranges. Empty edges are fine (the merge
+    skips them); the map's length is validated against the population at
+    reduce time.
     """
 
     num_edges: int = 1
+    assignments: Any = None
 
     def __post_init__(self):
         if self.num_edges < 1:
             raise ValueError("num_edges must be >= 1")
+        if self.assignments is not None:
+            a = np.asarray(self.assignments, np.int64)
+            if a.ndim != 1 or a.size < 1:
+                raise ValueError(
+                    "assignments must be a 1-D sequence of edge ids"
+                )
+            if np.any(a < 0) or np.any(a >= self.num_edges):
+                raise ValueError(
+                    f"assignments must lie in [0, {self.num_edges}); "
+                    f"got values in [{a.min()}, {a.max()}]"
+                )
+            # frozen dataclass: normalize to a hashable tuple via the
+            # escape hatch so configs stay usable as dict keys
+            object.__setattr__(self, "assignments", tuple(int(x) for x in a))
 
 
 def get_hierarchy(spec: Any) -> HierarchyConfig:
@@ -98,6 +120,7 @@ def edge_reduce(
     clients: Sequence[int],
     num_clients: int,
     num_edges: int,
+    assignments: Any = None,
 ) -> Tuple[Any, jnp.ndarray]:
     """Reduce a flush's payloads through the edge tier.
 
@@ -106,11 +129,23 @@ def edge_reduce(
     with at least one buffered completion (empty edges contribute nothing).
     ``weights`` are the flat merge weights (already staleness-discounted
     and, in buffered mode, normalized); they are cast to f32 exactly as the
-    flat path casts before its contraction.
+    flat path casts before its contraction. ``assignments`` overrides the
+    default balanced contiguous client→edge map (see
+    :class:`HierarchyConfig`); it must cover the whole population.
     """
     if len(payloads) != len(clients) or len(payloads) != len(weights):
         raise ValueError("payloads, weights, and clients must align")
-    edges = edge_assignments(num_clients, num_edges)
+    if assignments is None:
+        edges = edge_assignments(num_clients, num_edges)
+    else:
+        edges = np.asarray(assignments, np.int64)
+        if edges.shape != (num_clients,):
+            raise ValueError(
+                f"assignments must map all {num_clients} clients, "
+                f"got shape {edges.shape}"
+            )
+        if np.any(edges < 0) or np.any(edges >= num_edges):
+            raise ValueError(f"assignments must lie in [0, {num_edges})")
     w32 = np.asarray(weights, np.float32)
     summaries: List[Any] = []
     for e in range(num_edges):

@@ -40,6 +40,7 @@ from __future__ import annotations
 
 import collections
 import os
+import shutil
 from typing import Any, Callable, Dict, List, Optional, Protocol, Sequence, Set
 
 import numpy as np
@@ -103,7 +104,7 @@ class ClientStore(Protocol):
 
     def sync_pins(self, pinned: Set[int]) -> None: ...
 
-    def flush(self) -> None: ...
+    def flush(self) -> int: ...
 
 
 class ClientsView(Sequence):
@@ -196,8 +197,8 @@ class InMemoryStore:
     def sync_pins(self, pinned: Set[int]) -> None:
         pass
 
-    def flush(self) -> None:
-        pass
+    def flush(self) -> int:
+        return 0
 
 
 class OutOfCoreStore:
@@ -298,11 +299,161 @@ class OutOfCoreStore:
         self._pinned = set(pinned)
         self._evict_overflow()
 
-    def flush(self) -> None:
-        """Spill every resident state to cold storage (states stay hot)."""
+    def flush(self) -> int:
+        """Spill every *unpinned* resident state to cold storage (states stay
+        hot). Returns the number of states spilled.
+
+        Pinned clients are deferred, not flushed: a pin marks an open async
+        transaction (the client's update is in flight or buffered, awaiting
+        merge), so writing its mid-transaction state to the cold file would
+        let the on-disk copy race the pinned buffer — a checkpoint or crash
+        recovery reading that file would see a post-train state whose
+        pending update is not accounted for. Deferred clients spill through
+        the normal eviction path once unpinned (or via the next flush); a
+        consistent snapshot of pinned state goes through
+        :meth:`checkpoint_state`, which captures it together with the
+        scheduler's transaction bookkeeping.
+        """
+        spilled = deferred = 0
         with self.tel.span("store_flush", cat="store", track="server"):
             for ci, state in self._hot.items():
+                if ci in self._pinned:
+                    deferred += 1
+                    continue
                 self._spill(ci, state)
+                spilled += 1
+        if self.tel.enabled and deferred:
+            self.tel.metrics.counter("store.flush_deferred").inc(deferred)
+        return spilled
+
+    # -- run-checkpoint integration ----------------------------------------
+
+    def checkpoint_state(self):
+        """``(host, arrays, cold_files)`` snapshot of every touched client.
+
+        Unpinned residents are flushed first, so their cold file + resident
+        meta are the authoritative copy; ``cold_files`` maps each spilled
+        client's file name to its current path for the checkpoint writer to
+        hardlink (``save_tree``'s rename protocol never mutates an existing
+        inode, so the link stays frozen while the live file moves on).
+        Pinned residents are mid-async-transaction — their cold file (if
+        any) is stale by design (see :meth:`flush`) — so their live state
+        serializes inline into ``arrays`` instead. Clients never touched
+        (no meta, not resident) are omitted: a restore recreates them
+        deterministically on first access via ``make_state``.
+        """
+        self.flush()
+        clients_host: Dict[str, Any] = {}
+        meta_arrays: Dict[str, Any] = {}
+        inline_arrays: Dict[str, Any] = {}
+        cold_files: Dict[str, str] = {}
+
+        def _meta_entry(n, lossless, fields, order, difficulty, layer_scores):
+            entry = {
+                "fields": dict(fields),
+                "n": int(n),
+                "lossless_fraction": float(lossless),
+                "has_difficulty": difficulty is not None,
+                "has_layer_scores": layer_scores is not None,
+            }
+            ma = {"order": np.asarray(order)}
+            if difficulty is not None:
+                ma["difficulty"] = np.asarray(difficulty)
+            if layer_scores is not None:
+                ma["layer_scores"] = np.asarray(layer_scores)
+            return entry, ma
+
+        for ci, state in self._hot.items():
+            if ci not in self._pinned:
+                continue  # the flush above made this client's cold copy fresh
+            fields, trees = self._split_state(state)
+            key = str(ci)
+            entry, ma = _meta_entry(
+                state.n, state.lossless_fraction, fields,
+                state.order, state.difficulty, state.layer_scores,
+            )
+            entry["inline"] = True
+            clients_host[key] = entry
+            meta_arrays[key] = ma
+            if trees:
+                inline_arrays[key] = trees
+        for ci, meta in self._meta.items():
+            key = str(ci)
+            if key in clients_host:
+                continue  # pinned inline snapshot wins over the stale file
+            entry, ma = _meta_entry(
+                meta["n"], meta["lossless_fraction"], meta["fields"],
+                meta["order"], meta["difficulty"], meta["layer_scores"],
+            )
+            entry["inline"] = False
+            entry["spilled"] = bool(meta["spilled"])
+            clients_host[key] = entry
+            meta_arrays[key] = ma
+            if meta["spilled"]:
+                cold_files[f"client_{ci}.npz"] = self._path(ci)
+        host = {"clients": clients_host}
+        arrays: Dict[str, Any] = {}
+        if meta_arrays:
+            arrays["meta"] = meta_arrays
+        if inline_arrays:
+            arrays["inline"] = inline_arrays
+        return host, arrays, cold_files
+
+    def restore_checkpoint_state(self, host, arrays, cold_dir: str) -> None:
+        """Rebuild the population's cold state from a run checkpoint.
+
+        Everything restores *cold*: the hot set and pin set empty out (the
+        runner re-pins from its restored scheduler state), resident metas
+        rebuild from the manifest, inline (pinned-at-save) states and
+        hardlinked cold files re-materialize as per-client npz files, and
+        any cold file the checkpoint does not know about — state the
+        crashed run wrote after the snapshot — is deleted, so a fetch can
+        never resurrect post-checkpoint state. Metas omit ``batches``:
+        ``make_shell`` rebuilds those deterministically and ``_fetch``
+        keeps the shell's value for fields absent from the meta.
+        """
+        self._hot.clear()
+        self._pinned.clear()
+        self._meta.clear()
+        for name in os.listdir(self.directory):
+            is_cold = name.startswith("client_") and name.endswith(".npz")
+            if is_cold or name.endswith(".tmp"):
+                try:
+                    os.unlink(os.path.join(self.directory, name))
+                except OSError:  # pragma: no cover - racing unlink
+                    pass
+        meta_arrays = arrays.get("meta", {})
+        inline_arrays = arrays.get("inline", {})
+        for key, m in host["clients"].items():
+            ci = int(key)
+            ma = meta_arrays.get(key, {})
+            meta = {
+                "fields": dict(m["fields"]),
+                "n": int(m["n"]),
+                "lossless_fraction": float(m["lossless_fraction"]),
+                "order": np.asarray(ma["order"]),
+                "difficulty": (
+                    np.asarray(ma["difficulty"]) if m["has_difficulty"] else None
+                ),
+                "layer_scores": (
+                    np.asarray(ma["layer_scores"])
+                    if m["has_layer_scores"]
+                    else None
+                ),
+            }
+            if m.get("inline"):
+                trees = inline_arrays.get(key)
+                meta["spilled"] = trees is not None
+                if trees is not None:
+                    save_tree(self._path(ci), trees)
+            else:
+                meta["spilled"] = bool(m["spilled"])
+                if meta["spilled"]:
+                    shutil.copyfile(
+                        os.path.join(cold_dir, f"client_{ci}.npz"),
+                        self._path(ci),
+                    )
+            self._meta[ci] = meta
 
     # -- hot/cold mechanics ------------------------------------------------
 
@@ -328,13 +479,21 @@ class OutOfCoreStore:
                     value = trees[field]
                 setattr(state, field, value)
             state._lora_view = None
+            # restored-from-checkpoint metas omit the fields make_shell
+            # rebuilds deterministically (batches); keep the shell's value
             for field in META_FIELDS:
-                setattr(state, field, meta[field])
+                if field in meta:
+                    setattr(state, field, meta[field])
             if self.tel.enabled:
                 self.tel.metrics.counter("store.misses").inc()
             return state
 
-    def _spill(self, ci: int, state: Any) -> None:
+    @staticmethod
+    def _split_state(state: Any):
+        """(field-status map, spillable trees) of one state — the spill
+        wire format: statuses record ``None`` vs empty-dict vs tree out of
+        band (flatten_dict drops empty dicts, e.g. momentum-free SGD
+        optimizer state, so presence must ride separately)."""
         fields: Dict[str, str] = {}
         trees: Dict[str, Any] = {}
         for field in SPILL_FIELDS:
@@ -342,12 +501,14 @@ class OutOfCoreStore:
             if value is None:
                 fields[field] = "none"
             elif isinstance(value, dict) and not value:
-                # flatten_dict drops empty dicts (momentum-free SGD state);
-                # record presence out of band so the round trip is exact
                 fields[field] = "empty"
             else:
                 fields[field] = "tree"
                 trees[field] = value
+        return fields, trees
+
+    def _spill(self, ci: int, state: Any) -> None:
+        fields, trees = self._split_state(state)
         meta = {
             "fields": fields,
             "spilled": bool(trees),

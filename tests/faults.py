@@ -1,0 +1,154 @@
+"""Deterministic fault injection for kill-and-resume testing.
+
+A *fault point* names one call site inside the federation stack and a hit
+count; installing it wraps the target so that call raises
+:class:`InjectedCrash` — the in-process stand-in for SIGKILL. Everything up
+to the raise has really happened (rounds ran, files were written, spills
+landed), everything after it never does, so the on-disk state the "dead"
+process leaves behind is exactly what a hard kill at that instant leaves.
+The harness then builds a *fresh* runner/service (the "new process") and
+resumes from the checkpoint directory; ``tests/test_service.py`` asserts
+the resumed run reproduces the uninterrupted one.
+
+Targets (``kind:attr``):
+
+* ``runner:<method>`` — instance-patches the FibecFed runner (e.g.
+  ``_dispatch_round`` for pre/post-round kills). ``before=True`` dies on
+  entry to the Nth call (mid-round for loop/async, pre-round for the
+  vectorized engines, whose round is one atomic jitted call — there is no
+  observable mid-round instant to die at); ``before=False`` dies after the
+  round's work completed but before the service recorded or checkpointed
+  it — that work is lost and must be replayed.
+* ``scheduler:<method>`` — class-patches ``AsyncScheduler`` (the runner
+  builds its scheduler lazily, so there is no instance to patch at install
+  time). ``_flush`` with ``before=True`` dies between dispatch and merge:
+  clients trained, payloads buffered, nothing merged.
+* ``store:<method>`` — instance-patches the runner's client store (e.g.
+  ``_spill`` mid-write during eviction or the checkpoint flush).
+* ``ckpt:manifest`` — module-patches the run-checkpoint manifest writer:
+  arrays and cold files land, the commit record does not, leaving a
+  partial snapshot directory the next save must sweep and resume must
+  ignore.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+
+from repro.federated.async_agg import AsyncScheduler
+from repro.federated.service import COMPLETED, FederationService
+
+
+class InjectedCrash(RuntimeError):
+    """The simulated process kill. Never caught by production code."""
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPoint:
+    """Crash on the ``at``-th call of ``target``, before or after it runs."""
+
+    name: str
+    target: str  # "runner:attr" | "scheduler:attr" | "store:attr" | "ckpt:manifest"
+    at: int = 1
+    before: bool = True
+
+
+@contextlib.contextmanager
+def install(fault: FaultPoint, runner):
+    """Arm ``fault`` against ``runner``'s stack; yields a dict whose
+    ``fired`` flag records whether the crash actually triggered."""
+    kind, _, attr = fault.target.partition(":")
+    state = {"calls": 0, "fired": False}
+
+    def wrap(orig):
+        def wrapper(*args, **kwargs):
+            state["calls"] += 1
+            hit = state["calls"] == fault.at
+            if hit and fault.before:
+                state["fired"] = True
+                raise InjectedCrash(fault.name)
+            out = orig(*args, **kwargs)
+            if hit and not fault.before:
+                state["fired"] = True
+                raise InjectedCrash(fault.name)
+            return out
+
+        return wrapper
+
+    if kind == "runner":
+        orig = getattr(runner, attr)
+        setattr(runner, attr, wrap(orig))
+        try:
+            yield state
+        finally:
+            delattr(runner, attr)  # un-shadow the bound class method
+    elif kind == "scheduler":
+        orig = getattr(AsyncScheduler, attr)
+        setattr(AsyncScheduler, attr, wrap(orig))
+        try:
+            yield state
+        finally:
+            setattr(AsyncScheduler, attr, orig)
+    elif kind == "store":
+        orig = getattr(runner.store, attr)
+        setattr(runner.store, attr, wrap(orig))
+        try:
+            yield state
+        finally:
+            delattr(runner.store, attr)
+    elif kind == "ckpt" and attr == "manifest":
+        from repro.checkpoint import federation as fedckpt
+
+        orig = fedckpt._write_manifest
+        fedckpt._write_manifest = wrap(orig)
+        try:
+            yield state
+        finally:
+            fedckpt._write_manifest = orig
+    else:
+        raise ValueError(f"unknown fault target {fault.target!r}")
+
+
+def kill_and_resume(
+    build_runner,
+    *,
+    rounds: int,
+    ckpt_dir: str,
+    fault: FaultPoint,
+    ckpt_every: int = 1,
+    name: str = "fed",
+):
+    """Run under the service until ``fault`` kills it, then resume a fresh
+    runner from disk and finish. Returns ``(runner, federation)`` of the
+    resumed life. Asserts the fault actually fired (a fault point that
+    never triggers would silently test nothing)."""
+    runner = build_runner()
+    svc = FederationService()
+    svc.launch(
+        name, runner, rounds=rounds, ckpt_dir=ckpt_dir, ckpt_every=ckpt_every
+    )
+    with install(fault, runner) as state:
+        try:
+            svc.run()
+            crashed = False
+        except InjectedCrash:
+            crashed = True
+    assert state["fired"] and crashed, (
+        f"fault {fault.name!r} ({fault.target} @ call {fault.at}) never "
+        f"fired after {state['calls']} calls — the injection point tests "
+        "nothing at this configuration"
+    )
+
+    runner2 = build_runner()
+    svc2 = FederationService()
+    fed2 = svc2.launch(
+        name,
+        runner2,
+        rounds=rounds,
+        ckpt_dir=ckpt_dir,
+        ckpt_every=ckpt_every,
+        resume=True,
+    )
+    svc2.run()
+    assert fed2.state == COMPLETED
+    return runner2, fed2

@@ -11,6 +11,7 @@ import numpy as np
 import pytest
 
 from repro.checkpoint import (
+    CorruptCheckpointError,
     clean_stale_tmp,
     latest_checkpoint,
     load_checkpoint,
@@ -168,3 +169,40 @@ class TestAtomicity:
 
     def test_clean_stale_tmp_missing_dir(self, tmp_path):
         assert clean_stale_tmp(str(tmp_path / "nope")) == 0
+
+
+class TestCorruptionSafety:
+    """A partially-written spill/checkpoint file must fail loudly on load —
+    never parse into a silently-wrong tree — and the next save must sweep
+    the debris a killed writer left behind."""
+
+    def test_truncated_npz_fails_loudly(self, tmp_path):
+        path = save_tree(str(tmp_path / "state.npz"), _nested_tree())
+        blob = (tmp_path / "state.npz").read_bytes()
+        (tmp_path / "state.npz").write_bytes(blob[: len(blob) // 2])
+        with pytest.raises(CorruptCheckpointError):
+            load_tree(path)
+
+    def test_truncated_to_empty_fails_loudly(self, tmp_path):
+        path = save_tree(str(tmp_path / "state.npz"), _nested_tree())
+        (tmp_path / "state.npz").write_bytes(b"")
+        with pytest.raises(CorruptCheckpointError):
+            load_tree(path)
+
+    def test_garbage_bytes_fail_loudly(self, tmp_path):
+        (tmp_path / "state.npz").write_bytes(b"\x00" * 256)
+        with pytest.raises(CorruptCheckpointError):
+            load_tree(str(tmp_path / "state.npz"))
+
+    def test_missing_file_is_not_corruption(self, tmp_path):
+        # missing and corrupt are different failures: callers probe for
+        # absent spill files, but must never swallow a partial write
+        with pytest.raises(FileNotFoundError):
+            load_tree(str(tmp_path / "never_written.npz"))
+
+    def test_save_checkpoint_sweeps_stale_tmp(self, tmp_path):
+        # a writer died mid-save; the next save cleans up before writing
+        (tmp_path / "dead123.tmp").write_bytes(b"partial")
+        path = save_checkpoint(str(tmp_path), 2, {"a": np.ones(2, np.float32)})
+        assert not [n for n in os.listdir(tmp_path) if n.endswith(".tmp")]
+        np.testing.assert_array_equal(load_tree(path)["a"], np.ones(2))

@@ -762,6 +762,63 @@ def test_hierarchy_multi_edge_allclose(world, num_edges):
     assert r_flat.comm_bytes_per_round == r_edge.comm_bytes_per_round
 
 
+@pytest.mark.parametrize(
+    "num_edges,assignments",
+    [
+        (3, (0, 0, 1, 2)),  # uneven: one edge holds half the population
+        (4, (2, 0, 0, 3)),  # uneven + empty edge 1 + non-contiguous regions
+    ],
+    ids=["E3-lopsided", "E4-empty-edge"],
+)
+def test_hierarchy_uneven_assignments_allclose(world, num_edges, assignments):
+    """Explicit client→edge maps (uneven region sizes, empty edges, ids out
+    of block order) only reassociate the weighted sum: allclose to the flat
+    merge, with per-client comm accounting untouched by the topology."""
+    from repro.federated import HierarchyConfig
+
+    model, loss_fn, client_data = world
+    r_flat, h_flat = _run(world, "fibecfed", "adamw", "async")
+    r_edge = make_runner(
+        "fibecfed", model, loss_fn, FL, client_data,
+        optimizer="adamw", engine="async", seed=7,
+        hierarchy=HierarchyConfig(num_edges=num_edges, assignments=assignments),
+    )
+    r_edge.init_phase()
+    h_edge = [r_edge.run_round(t) for t in range(ROUNDS)]
+    for hf, he in zip(h_flat, h_edge):
+        assert hf["loss"] == pytest.approx(he["loss"], rel=1e-4, abs=1e-5)
+    _assert_close_trees(r_flat.global_lora, r_edge.global_lora)
+    assert r_flat.comm_bytes_per_round == r_edge.comm_bytes_per_round
+    assert r_flat.comm_upload_bytes_per_round == r_edge.comm_upload_bytes_per_round
+
+
+def test_hierarchy_assignment_validation():
+    """Malformed client→edge maps fail at construction or reduce time, not
+    silently mis-route updates."""
+    from repro.federated import HierarchyConfig, edge_reduce
+    from repro.federated.hierarchy import build_edge_summary_fn
+
+    with pytest.raises(ValueError, match=r"\[0, 2\)"):
+        HierarchyConfig(num_edges=2, assignments=(0, 2, 1))
+    with pytest.raises(ValueError, match=r"\[0, 3\)"):
+        HierarchyConfig(num_edges=3, assignments=(0, -1, 1))
+    with pytest.raises(ValueError, match="1-D"):
+        HierarchyConfig(num_edges=2, assignments=((0, 1), (1, 0)))
+    # config normalizes to a hashable tuple (frozen dataclass stays usable
+    # as a dict key)
+    cfg = HierarchyConfig(num_edges=3, assignments=np.array([0, 2, 1]))
+    assert cfg.assignments == (0, 2, 1)
+    assert hash(cfg) == hash(HierarchyConfig(num_edges=3, assignments=(0, 2, 1)))
+    # the map must cover the whole population at reduce time
+    fn = build_edge_summary_fn()
+    payloads = [{"a": np.ones(2, np.float32)}] * 2
+    with pytest.raises(ValueError, match="map all 4 clients"):
+        edge_reduce(
+            fn, payloads, np.ones(2, np.float32), [0, 1],
+            num_clients=4, num_edges=2, assignments=(0, 1),
+        )
+
+
 def test_ef_residual_survives_eviction(world, tmp_path):
     """Error-feedback residuals are client state: evicting a client to disk
     mid-run and reloading it must leave the EF telescoping unchanged vs the

@@ -1,0 +1,334 @@
+"""Fault-tolerant federation service: kill/resume must equal uninterrupted.
+
+The matrix kills a service-driven run at injected fault points (pre-round,
+post-round-before-checkpoint, mid-checkpoint-commit, between dispatch and
+merge, during a store spill/flush), resumes a fresh runner from the
+checkpoint directory, and asserts the resumed run reproduces the
+uninterrupted one — bit-identical global LoRA, losses, and comm accounting
+for the sync engines; allclose LoRA with *exact* comm/staleness accounting
+for async. Checkpointing disabled (``ckpt_every=0``) must be an exact no-op
+on every engine, and checkpointing *enabled* must not perturb an
+uninterrupted run either. Run under
+``XLA_FLAGS=--xla_force_host_platform_device_count=2`` to cover the sharded
+no-op row on a real mesh (CI's fault-injection step does).
+"""
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from faults import FaultPoint, kill_and_resume
+from repro.config import FibecFedConfig, ModelConfig
+from repro.federated import (
+    AsyncAggConfig,
+    FederationService,
+    OutOfCoreStore,
+    make_runner,
+)
+from repro.models import build_model
+from repro.train import make_loss_fn
+
+CFG = ModelConfig(
+    name="tiny-lm", family="dense", num_layers=2, d_model=32, num_heads=2,
+    num_kv_heads=2, d_ff=64, vocab_size=256, head_dim=16, rope="full",
+    norm="rmsnorm", mlp="swiglu", dtype="float32", lora_rank=2, max_seq_len=64,
+)
+FL = FibecFedConfig(
+    num_devices=4, devices_per_round=2, rounds=4, batch_size=4,
+    learning_rate=5e-3, fim_warmup_epochs=1, gal_fraction=0.5, sparse_ratio=0.5,
+)
+ROUNDS = 4
+
+# buffer < concurrency leaves a client in flight (an event on the heap) at
+# every merge, so checkpoints capture a non-trivial scheduler state; the
+# dropout scenario adds drops + jitter, exercising the scenario RNG snapshot
+ASYNC_KW = dict(
+    scenario="dropout",
+    async_cfg=AsyncAggConfig(buffer_size=2, concurrency=3),
+)
+
+
+@pytest.fixture(scope="module")
+def world():
+    from repro.data import dirichlet_partition, make_keyword_task
+
+    model = build_model(CFG)
+    task = make_keyword_task(n_samples=50, seq_len=12, vocab_size=256, seed=0)
+    parts = dirichlet_partition(task.data["label"], FL.num_devices, 1.0, seed=0)
+    client_data = [
+        {k: v[idx] for k, v in task.data.items() if k != "label"} for idx in parts
+    ]
+    return model, make_loss_fn(model), client_data
+
+
+def _builder(world, engine, store_kind, workdir):
+    """Runner factory: every call is a "fresh process" — new runner, and for
+    the out-of-core store a fresh store directory (a real restart would keep
+    the directory, but isolated dirs keep runs independent; restore wipes
+    and rematerializes the directory either way)."""
+    model, loss_fn, client_data = world
+    counter = {"n": 0}
+
+    def build():
+        counter["n"] += 1
+        store = None
+        if store_kind == "ooc":
+            store = OutOfCoreStore(
+                os.path.join(workdir, f"store{counter['n']}"), hot_slots=2
+            )
+        kw = dict(ASYNC_KW) if engine == "async" else {}
+        return make_runner(
+            "fibecfed", model, loss_fn, FL, client_data,
+            optimizer="adamw", engine=engine, seed=7, store=store, **kw,
+        )
+
+    return build
+
+
+def _plain(build, rounds=ROUNDS):
+    runner = build()
+    runner.init_phase()
+    history = [runner.run_round(t) for t in range(rounds)]
+    return runner, history
+
+
+@pytest.fixture(scope="module")
+def baselines(world, tmp_path_factory):
+    """Uninterrupted plain runs (no service, no checkpoints), cached per
+    (engine, store kind) — the ground truth every resumed run must match."""
+    cache = {}
+
+    def get(engine, store_kind):
+        key = (engine, store_kind)
+        if key not in cache:
+            workdir = str(tmp_path_factory.mktemp(f"base-{engine}-{store_kind}"))
+            cache[key] = _plain(_builder(world, engine, store_kind, workdir))
+        return cache[key]
+
+    return get
+
+
+def _trees_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def _trees_close(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_allclose(
+            np.asarray(x), np.asarray(y), atol=5e-5, rtol=1e-4
+        )
+
+
+def _assert_resume_equals_uninterrupted(engine, base, resumed):
+    base_runner, base_hist = base
+    runner, fed = resumed
+    assert len(fed.history) == ROUNDS
+    if engine == "async":
+        _trees_close(base_runner.global_lora, runner.global_lora)
+        for hb, hr in zip(base_hist, fed.history):
+            assert hr["loss"] == pytest.approx(hb["loss"], rel=1e-5, abs=1e-7)
+            # staleness/clock/drop accounting must be *identical*, not close
+            for k in (
+                "virtual_time", "staleness_mean", "merged_clients",
+                "dropped_clients", "stale_dropped", "buffer_size",
+            ):
+                assert hr[k] == hb[k], f"round accounting diverged on {k!r}"
+    else:
+        _trees_equal(base_runner.global_lora, runner.global_lora)
+        for hb, hr in zip(base_hist, fed.history):
+            assert hr["loss"] == hb["loss"]
+            assert hr["selected_batches"] == hb["selected_batches"]
+    # comm bytes charged exactly once per round — a resume that replayed a
+    # recorded round (or restored a mid-round partial) would double-charge
+    assert runner.comm_bytes_per_round == base_runner.comm_bytes_per_round
+    assert (
+        runner.comm_upload_bytes_per_round
+        == base_runner.comm_upload_bytes_per_round
+    )
+
+
+# -- kill/resume matrix ------------------------------------------------------
+
+# _dispatch_round is called once per round: at=2 dies in round 1 (0-based),
+# after round 0's checkpoint exists. "post_round" dies after the round's
+# work completed but before the service recorded/checkpointed it — that
+# work must be replayed. "mid_checkpoint" kills the manifest commit of the
+# second snapshot, leaving a partial directory to sweep.
+_COMMON = [
+    FaultPoint("pre_round", "runner:_dispatch_round", at=2, before=True),
+    FaultPoint("post_round", "runner:_dispatch_round", at=2, before=False),
+    FaultPoint("mid_checkpoint", "ckpt:manifest", at=2, before=True),
+]
+# dies between dispatch and merge: clients trained and buffered, nothing
+# merged yet (the scheduler's second flush)
+_ASYNC = [FaultPoint("dispatch_merge_gap", "scheduler:_flush", at=2, before=True)]
+# during_spill: an eviction/flush write that never finished; mid_flush: the
+# checkpoint's store flush completed but serialization never followed
+_OOC = [
+    FaultPoint("during_spill", "store:_spill", at=12, before=True),
+    FaultPoint("mid_flush", "store:flush", at=2, before=False),
+]
+
+
+def _matrix():
+    cases = []
+    for engine in ("loop", "vectorized", "async"):
+        for store_kind in ("mem", "ooc"):
+            points = list(_COMMON) if store_kind == "mem" else [_COMMON[0]]
+            if store_kind == "ooc":
+                points += _OOC
+            if engine == "async":
+                points += _ASYNC
+            for p in points:
+                cases.append(
+                    pytest.param(
+                        engine, store_kind, p,
+                        id=f"{engine}-{store_kind}-{p.name}",
+                    )
+                )
+    return cases
+
+
+@pytest.mark.parametrize("engine,store_kind,fault", _matrix())
+def test_kill_resume_matrix(world, baselines, tmp_path, engine, store_kind, fault):
+    base = baselines(engine, store_kind)
+    build = _builder(world, engine, store_kind, str(tmp_path))
+    resumed = kill_and_resume(
+        build,
+        rounds=ROUNDS,
+        ckpt_dir=str(tmp_path / "ckpt"),
+        fault=fault,
+        ckpt_every=1,
+    )
+    _assert_resume_equals_uninterrupted(engine, base, resumed)
+
+
+# -- checkpointing must never perturb a run ---------------------------------
+
+
+@pytest.mark.parametrize("engine", ["loop", "vectorized", "sharded", "async"])
+def test_service_without_checkpointing_is_noop(world, baselines, engine):
+    """ckpt_every=0: the service does zero checkpoint I/O and the run is
+    exactly the hand-driven runner, on every engine."""
+    if engine == "sharded":
+        base = _plain(_builder(world, "sharded", "mem", ""))
+    else:
+        base = baselines(engine, "mem")
+    base_runner, base_hist = base
+    runner = _builder(world, engine, "mem", "")()
+    svc = FederationService()
+    fed = svc.launch("noop", runner, rounds=ROUNDS)
+    svc.run()
+    assert fed.state == "completed"
+    _trees_equal(base_runner.global_lora, runner.global_lora)
+    for hb, hr in zip(base_hist, fed.history):
+        assert hr["loss"] == hb["loss"]
+    assert runner.comm_bytes_per_round == base_runner.comm_bytes_per_round
+
+
+@pytest.mark.parametrize(
+    "engine,store_kind", [("vectorized", "ooc"), ("async", "mem")]
+)
+def test_uninterrupted_run_with_checkpointing_matches_plain(
+    world, baselines, tmp_path, engine, store_kind
+):
+    """Taking checkpoints every round (without ever crashing) must not
+    change the numbers — snapshotting is observation, not interference."""
+    base_runner, base_hist = baselines(engine, store_kind)
+    runner = _builder(world, engine, store_kind, str(tmp_path))()
+    svc = FederationService()
+    fed = svc.launch(
+        "steady", runner, rounds=ROUNDS,
+        ckpt_dir=str(tmp_path / "ckpt"), ckpt_every=1,
+    )
+    svc.run()
+    assert fed.state == "completed"
+    if engine == "async":
+        _trees_close(base_runner.global_lora, runner.global_lora)
+    else:
+        _trees_equal(base_runner.global_lora, runner.global_lora)
+    for hb, hr in zip(base_hist, fed.history):
+        assert hr["loss"] == pytest.approx(hb["loss"], rel=1e-6, abs=1e-9)
+    assert runner.comm_bytes_per_round == base_runner.comm_bytes_per_round
+
+
+# -- multi-tenant service ----------------------------------------------------
+
+
+def test_two_federations_share_one_service(world, baselines, tmp_path):
+    """Two federations (different engines) interleave round-robin in one
+    process and each reproduces its solo run; pause/resume/status work."""
+    base_vec = baselines("vectorized", "mem")
+    base_async = baselines("async", "mem")
+    svc = FederationService()
+    r_vec = _builder(world, "vectorized", "mem", "")()
+    r_async = _builder(world, "async", "mem", "")()
+    f_vec = svc.launch("vec", r_vec, rounds=ROUNDS)
+    f_async = svc.launch(
+        "async", r_async, rounds=ROUNDS,
+        ckpt_dir=str(tmp_path / "ckpt"), ckpt_every=2,
+    )
+    # interleave one round, pause one tenant, tick, resume, finish
+    svc.tick()
+    svc.pause("vec")
+    svc.tick()
+    assert f_vec.next_round == 1 and f_async.next_round == 2
+    assert svc.status("vec")["state"] == "paused"
+    svc.resume("vec")
+    svc.run()
+    assert f_vec.state == "completed" and f_async.state == "completed"
+    _trees_equal(base_vec[0].global_lora, r_vec.global_lora)
+    _trees_close(base_async[0].global_lora, r_async.global_lora)
+    for hb, hr in zip(base_vec[1], f_vec.history):
+        assert hr["loss"] == hb["loss"]
+    assert r_async.comm_bytes_per_round == base_async[0].comm_bytes_per_round
+    status = svc.status()
+    assert set(status) == {"vec", "async"}
+
+
+# -- store flush vs. async pins ---------------------------------------------
+
+
+def test_flush_defers_pinned_clients(tmp_path):
+    """A flush during an open async transaction must not race the pinned
+    buffer: the pinned client's cold file keeps its pre-transaction content
+    (or stays absent) until unpin — never the mid-transaction state."""
+    from repro.core.fibecfed import ClientState
+
+    def make_state(ci):
+        return ClientState(
+            data={"x": np.zeros((2, 2), np.float32)},
+            n=2,
+            batches=[np.array([0])],
+            order=np.array([0]),
+            opt_state={},
+            _lora={"a": np.full((3,), float(ci), np.float32)},
+        )
+
+    store = OutOfCoreStore(str(tmp_path / "s"), hot_slots=4)
+    store.bind(
+        client_data=[{"x": np.zeros((2, 2), np.float32)}] * 3,
+        make_state=make_state,
+        make_shell=make_state,
+    )
+    s0, s1 = store.get(0), store.get(1)
+    store.pin(0)
+    s0._lora["a"] = np.full((3,), 99.0, np.float32)  # mid-transaction write
+    spilled = store.flush()
+    assert spilled == 1  # client 1 spilled; pinned client 0 deferred
+    assert not os.path.exists(store._path(0))  # no racing cold copy
+    assert os.path.exists(store._path(1))
+    # after the transaction closes, the next flush persists the final state
+    store.unpin(0)
+    assert store.flush() == 2
+    from repro.checkpoint import load_tree
+
+    cold = load_tree(store._path(0))
+    np.testing.assert_array_equal(cold["_lora"]["a"], s0._lora["a"])
+    del s1
